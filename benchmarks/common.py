@@ -1,0 +1,17 @@
+"""Shared benchmark harness: every table/figure module exposes ``run()``
+returning a list of CSV rows ``name,us_per_call,derived`` where ``derived``
+is the headline metric the paper's table reports."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+
+def timed(fn: Callable, *args, **kw) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"

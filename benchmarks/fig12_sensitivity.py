@@ -1,0 +1,35 @@
+"""Paper Fig. 12: sensitivity of ResNet-50 inference cycles (64x64 array)
+to each SRAM size / bandwidth parameter around the optimal point.
+
+Paper's finding: weak sensitivity to SRAM sizes (worst ~1.23x for the
+smallest IBuf), strong sensitivity to bandwidths (up to ~11.4x for the
+smallest BW_i)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import INFER_PRESETS
+from repro.core.dse import search, sensitivity
+from repro.core.hardware import KB
+from repro.core.networks import resnet50
+
+from .common import row, timed
+
+
+def run() -> List[str]:
+    hw = INFER_PRESETS[64]
+    net = resnet50(1, bn=False)
+    res = search(hw, net, 2048, 2048)
+    b = res.best
+    hw_opt = hw.replace(wbuf=b.sizes_kb[0] * KB, ibuf=b.sizes_kb[1] * KB,
+                        obuf=b.sizes_kb[2] * KB, vmem=b.sizes_kb[3] * KB,
+                        bw_w=b.bws[0], bw_i=b.bws[1], bw_o=b.bws[2],
+                        bw_v=b.bws[3])
+    us, sens = timed(sensitivity, hw_opt, net)
+    rows: List[str] = []
+    for param, curve in sens.items():
+        worst = max(curve.values())
+        sat = min(v for v in curve if curve[v] <= 1.05)
+        rows.append(row(f"fig12.{param}", us / len(sens),
+                        f"worst={worst:.2f}x;saturates_at={sat}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Roofline benchmark: reads the dry-run artifacts produced by
+``repro.launch.dryrun`` (artifacts/dryrun/*.json) and reports the three
+roofline terms per (arch x shape) cell. Falls back to a note if the
+dry-run has not been executed yet."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+from .common import row
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    if not ARTIFACTS.exists():
+        return [row("roofline.missing", 0.0,
+                    "run `PYTHONPATH=src python -m repro.launch.dryrun --all` first")]
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        r = d.get("roofline", {})
+        if not r:
+            continue
+        rows.append(row(
+            f"roofline.{d['arch']}.{d['shape']}.{d['mesh']}",
+            d.get("compile_us", 0.0),
+            f"bound={r['bound']};t_compute={r['t_compute_s']:.3e}s;"
+            f"t_memory={r['t_memory_s']:.3e}s;"
+            f"t_collective={r['t_collective_s']:.3e}s;"
+            f"frac={r['roofline_fraction']:.3f};"
+            f"model_vs_hlo={r.get('model_flops_ratio', 0):.3f}"))
+    return rows or [row("roofline.empty", 0.0, "no artifacts found")]

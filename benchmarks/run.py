@@ -1,0 +1,44 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run as
+``PYTHONPATH=src python -m benchmarks.run [--only PREFIX]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only benchmarks whose module name contains this")
+    args = ap.parse_args()
+
+    from . import (fig5_stall_models, fig12_sensitivity, table6_resnet50,
+                   table7_resnet18, table8_dse, table9_dse_networks,
+                   table10_economic)
+    from . import roofline_bench
+
+    modules = [table6_resnet50, table7_resnet18, fig5_stall_models,
+               table8_dse, table9_dse_networks, table10_economic,
+               fig12_sensitivity, roofline_bench]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        name = mod.__name__.rsplit(".", 1)[-1]
+        if args.only and args.only not in name:
+            continue
+        try:
+            for line in mod.run():
+                print(line)
+        except Exception as exc:  # pragma: no cover
+            failures += 1
+            print(f"{name}.ERROR,0.0,{type(exc).__name__}:{exc}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Table X + Fig. 11: economic design points for ResNet-50 inference
+on a 64x64 array — the design landscape within 15% of the optimum, and the
+minimum-SRAM / minimum-bandwidth points in it."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import INFER_PRESETS
+from repro.core.dse import search
+from repro.core.networks import resnet50
+
+from .common import row, timed
+
+
+def run() -> List[str]:
+    hw = INFER_PRESETS[64]
+    net = resnet50(1, bn=False)
+    us, res = timed(search, hw, net, 2048, 2048, lower_bound=False,
+                    collect=False)
+    eco_s = res.economic_min_sram()
+    eco_b = res.economic_min_bw()
+    best = res.best
+    rows = [
+        row("table10.optimal", us,
+            f"sram={best.total_size_kb}kB;bw={best.total_bw};penalty=0%"),
+        row("table10.min_sram", 0.0,
+            f"sram={eco_s.total_size_kb}kB;bw={eco_s.total_bw};"
+            f"penalty={(eco_s.cycles / best.cycles - 1) * 100:.1f}%;"
+            f"sram_saving={(1 - eco_s.total_size_kb / best.total_size_kb) * 100:.1f}%;"
+            f"paper=448kB/13.1%"),
+        row("table10.min_bw", 0.0,
+            f"sram={eco_b.total_size_kb}kB;bw={eco_b.total_bw};"
+            f"penalty={(eco_b.cycles / best.cycles - 1) * 100:.1f}%;"
+            f"paper=1792bits/14.6%"),
+        row("fig11.landscape", 0.0,
+            f"points_within_15pct={len(res.points)}"),
+    ]
+    return rows

@@ -1,0 +1,37 @@
+"""Paper Table VI: non-Conv share of runtime/energy/accesses for ResNet-50,
+training (HT1-3, batch 32) and inference (HI1-3, batch 1)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import INFER_PRESETS, TRAIN_PRESETS, simulate
+
+from .common import row, timed
+
+PAPER = {  # (mode, JxK) -> (nonconv_runtime_%, nonconv_energy_%)
+    ("training", 16): (41.9, 50.3), ("training", 32): (56.6, 52.3),
+    ("training", 64): (59.5, 49.4),
+    ("inference", 16): (30.1, 33.2), ("inference", 32): (41.6, 40.3),
+    ("inference", 64): (49.3, 38.2),
+}
+
+
+def run(network: str = "resnet50") -> List[str]:
+    rows: List[str] = []
+    for mode, presets in (("training", TRAIN_PRESETS),
+                          ("inference", INFER_PRESETS)):
+        for jk, hw in presets.items():
+            us, rep = timed(simulate, hw, network, mode)
+            e = rep.energy(hw)
+            nc_rt = rep.nonconv_fraction("cycles") * 100
+            nc_on = rep.nonconv_fraction("sram") * 100
+            nc_off = rep.nonconv_fraction("dram") * 100
+            nc_e = rep.nonconv_energy_fraction(hw) * 100
+            ref = PAPER.get((mode, jk))
+            derived = (f"nonconv_runtime={nc_rt:.1f}%;onchip={nc_on:.1f}%;"
+                       f"offchip={nc_off:.1f}%;energy={nc_e:.1f}%;"
+                       f"P={e['P_avg']:.2f}W;t={e['runtime_s']:.4f}s"
+                       + (f";paper_runtime={ref[0]}%;paper_energy={ref[1]}%"
+                          if ref and network == "resnet50" else ""))
+            rows.append(row(f"table6.{network}.{mode}.{jk}x{jk}", us, derived))
+    return rows

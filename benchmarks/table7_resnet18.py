@@ -1,0 +1,11 @@
+"""Paper Table VII: same analysis as Table VI for ResNet-18."""
+from __future__ import annotations
+
+from typing import List
+
+from . import table6_resnet50
+
+
+def run() -> List[str]:
+    rows = table6_resnet50.run(network="resnet18")
+    return [r.replace("table6.", "table7.") for r in rows]

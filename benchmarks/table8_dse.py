@@ -1,0 +1,33 @@
+"""Paper Table VIII: optimal vs worst-case resource allocation for ResNet-50
+inference across array sizes, budgets (SRAM kB, bits/cycle) =
+(512,512) / (1024,1024) / (2048,2048) / (4096,4096)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import HardwareSpec, INFER_PRESETS
+from repro.core.dse import search
+from repro.core.networks import resnet50
+
+from .common import row, timed
+
+BUDGETS = {16: 512, 32: 1024, 64: 2048, 128: 4096}
+PAPER = {16: 9.64, 32: 14.45, 64: 18.43, 128: 25.55}
+
+
+def _hw(jk: int) -> HardwareSpec:
+    base = INFER_PRESETS.get(jk, INFER_PRESETS[64])
+    return base.replace(name=f"dse{jk}", J=jk, K=jk)
+
+
+def run(network=resnet50, tag: str = "table8.resnet50") -> List[str]:
+    net = network(1, bn=False)
+    rows: List[str] = []
+    for jk, budget in BUDGETS.items():
+        us, res = timed(search, _hw(jk), net, budget, budget)
+        rows.append(row(
+            f"{tag}.{jk}x{jk}", us,
+            f"improvement={res.improvement:.2f}x;paper={PAPER[jk]}x;"
+            f"opt_sizes={'/'.join(map(str, res.best.sizes_kb))}kB;"
+            f"opt_bw={'/'.join(map(str, res.best.bws))}"))
+    return rows

@@ -1,0 +1,21 @@
+"""Quickstart: train a reduced smollm-360m for a few steps on CPU, then
+serve a few greedy tokens from it.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.launch.serve import serve_loop
+from repro.launch.train import train_loop
+
+
+def main() -> None:
+    print("== training (reduced smollm-360m, synthetic stream) ==")
+    out = train_loop("smollm-360m", steps=15, batch=8, seq=48, lr=3e-3)
+    print(f"loss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+
+    print("== serving (reduced qwen3-0.6b, batched greedy decode) ==")
+    served = serve_loop("qwen3-0.6b", batch=4, prompt_len=12, gen=8)
+    print("generated token ids:\n", served["generated"])
+
+
+if __name__ == "__main__":
+    main()

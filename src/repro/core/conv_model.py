@@ -1,0 +1,237 @@
+"""Systolic-array (Conv/FC) performance model — paper Sections IV-C, IV-D.
+
+Implements, with ceiling-corrected multipliers (paper footnote 1):
+  * DRAM access counts  A_Dw (Eq. 4), A_Di (Eq. 7), A_Dp (Eqs. 9-10),
+    A_Db (Eq. 11)                                     [bits]
+  * SRAM access counts  (Table III)                   [bits]
+  * compute cycles      (Eqs. 15-16, PSO_SA = (J-1)+(K-1))
+  * DRAM stall cycles   under double buffering via the exhaustive 4-valid-
+    case tile-segment analysis (Table IV, Fig. 6, Eqs. 17-18).
+
+Also provides the two degraded baselines of Fig. 5 ("No-Stall" and
+"Simplified") for the accuracy comparison benchmark.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from .hardware import HardwareSpec
+from .layers import ConvLayer
+from .tiling import ConvTiling, ceil_div, make_conv_tiling
+
+
+@dataclass
+class PerfStats:
+    """Per-layer performance statistics (the SimDIT output interface)."""
+    engine: str = "sa"                       # 'sa' | 'simd'
+    compute_cycles: int = 0
+    stall_cycles: int = 0
+    dram_bits: Dict[str, int] = field(default_factory=dict)   # by stream
+    sram_bits: Dict[str, int] = field(default_factory=dict)   # by buffer
+    ops: Dict[str, int] = field(default_factory=dict)         # arithmetic op counts
+
+    @property
+    def total_cycles(self) -> int:
+        return self.compute_cycles + self.stall_cycles
+
+    @property
+    def dram_total_bits(self) -> int:
+        return sum(self.dram_bits.values())
+
+    @property
+    def sram_total_bits(self) -> int:
+        return sum(self.sram_bits.values())
+
+    def merged(self, other: "PerfStats") -> "PerfStats":
+        out = PerfStats(engine=self.engine,
+                        compute_cycles=self.compute_cycles + other.compute_cycles,
+                        stall_cycles=self.stall_cycles + other.stall_cycles)
+        for src, dst in ((self.dram_bits, out.dram_bits),
+                         (other.dram_bits, out.dram_bits)):
+            for k, v in src.items():
+                dst[k] = dst.get(k, 0) + v
+        for src, dst in ((self.sram_bits, out.sram_bits),
+                         (other.sram_bits, out.sram_bits)):
+            for k, v in src.items():
+                dst[k] = dst.get(k, 0) + v
+        for src in (self.ops, other.ops):
+            for k, v in src.items():
+                out.ops[k] = out.ops.get(k, 0) + v
+        return out
+
+
+@dataclass(frozen=True)
+class ConvMultipliers:
+    """Outer (m_*) and inner (r_*) loop multipliers (Eqs. 1, 12)."""
+    m_oh: int; m_ow: int; m_n: int; m_kh: int; m_kw: int; m_ic: int; m_oc: int
+    r_oh: int; r_ow: int; r_n: int; r_kh: int; r_kw: int; r_ic: int; r_oc: int
+
+    @property
+    def m_outer(self) -> int:                      # Eq. 14
+        return (self.m_oh * self.m_ow * self.m_n * self.m_kh * self.m_kw
+                * self.m_ic * self.m_oc)
+
+    @property
+    def m_w_tile(self) -> int:                     # Eq. 3
+        return self.m_kh * self.m_kw * self.m_ic * self.m_oc
+
+    @property
+    def m_spatial(self) -> int:                    # m_oh * m_ow * m_n
+        return self.m_oh * self.m_ow * self.m_n
+
+    @property
+    def m_accum(self) -> int:                      # m_kh * m_kw * m_ic
+        return self.m_kh * self.m_kw * self.m_ic
+
+    @property
+    def m_inner(self) -> int:                      # Eq. 13
+        return (self.r_oh * self.r_ow * self.r_n * self.r_kh * self.r_kw
+                * self.r_ic * self.r_oc)
+
+
+def conv_multipliers(layer: ConvLayer, t: ConvTiling) -> ConvMultipliers:
+    return ConvMultipliers(
+        m_oh=ceil_div(layer.oh, t.T_oh), m_ow=ceil_div(layer.ow, t.T_ow),
+        m_n=ceil_div(layer.n, t.T_n), m_kh=ceil_div(layer.kh, t.T_kh),
+        m_kw=ceil_div(layer.kw, t.T_kw), m_ic=ceil_div(layer.ic, t.T_ic),
+        m_oc=ceil_div(layer.oc, t.T_oc),
+        r_oh=t.T_oh, r_ow=t.T_ow, r_n=t.T_n, r_kh=t.T_kh, r_kw=t.T_kw,
+        r_ic=ceil_div(t.T_ic, t.t_ic), r_oc=ceil_div(t.T_oc, t.t_oc))
+
+
+# ---------------------------------------------------------------------------
+# DRAM accesses (Sec. IV-C)
+# ---------------------------------------------------------------------------
+
+def conv_dram_bits(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling,
+                   m: ConvMultipliers) -> Dict[str, int]:
+    v_w = t.weight_tile_elems()                               # Eq. 2
+    a_dw = v_w * m.m_w_tile * hw.b_w                          # Eq. 4
+
+    v_i = t.ifmap_tile_elems(layer.s)                         # Eq. 5
+    a_di = v_i * m.m_outer * hw.b_i                           # Eqs. 6-7
+
+    v_p = t.psum_tile_elems()                                 # Eq. 8
+    m_p = m.m_spatial * m.m_oc * (2 * m.m_accum - 1)          # Eq. 9
+    a_dp = v_p * m_p * hw.b_p                                 # Eq. 10
+
+    a_db = t.T_oc * m.m_oc * hw.b_b if layer.has_bias else 0  # Eq. 11
+    return {"weight": a_dw, "ifmap": a_di, "psum": a_dp, "bias": a_db}
+
+
+# ---------------------------------------------------------------------------
+# SRAM accesses (Table III)
+# ---------------------------------------------------------------------------
+
+def conv_sram_bits(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling,
+                   m: ConvMultipliers) -> Dict[str, int]:
+    iters = m.m_inner * m.m_outer
+    v_w_i = t.T_kh * t.T_kw * t.t_ic * t.t_oc // (t.T_kh * t.T_kw)  # inner tile
+    # Inner tiles have t_phi = 1 on every dim except ic/oc (Fig. 4):
+    v_w_inner = t.t_ic * t.t_oc
+    v_i_inner = t.t_ic
+    v_p_inner = t.t_oc
+    ofmap_elems = layer.ofmap_elems
+
+    a_sw = v_w_inner * iters * hw.b_w
+    a_si = v_i_inner * iters * hw.b_i
+    a_sp = (v_p_inner * 2 * iters - ofmap_elems) * hw.b_p
+    a_sb = ofmap_elems * hw.b_b if layer.has_bias else 0
+    return {"wbuf": a_sw, "ibuf": a_si, "obuf": a_sp, "bbuf": a_sb}
+
+
+# ---------------------------------------------------------------------------
+# Cycle counts (Sec. IV-D)
+# ---------------------------------------------------------------------------
+
+def conv_tile_compute_cycles(hw: HardwareSpec, t: ConvTiling) -> int:
+    """Eq. 15."""
+    return (t.T_oh * t.T_ow * t.T_n * t.T_kh * t.T_kw
+            * ceil_div(t.T_ic, hw.J) * ceil_div(t.T_oc, hw.K))
+
+
+def conv_compute_cycles(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling,
+                        m: ConvMultipliers) -> int:
+    """Eq. 16 (includes per-tile pipeline setup overhead)."""
+    return (conv_tile_compute_cycles(hw, t) + hw.pso_sa) * m.m_outer
+
+
+def conv_stall_cycles(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling,
+                      m: ConvMultipliers) -> int:
+    """Tile-segment DRAM stall model (Table IV; Fig. 6; Eqs. 17-18).
+
+    Valid cases (weight+bias load / weight load / psum load):
+      Case-1: 0/0/0 -- weight reused, first accumulation step already done
+      Case-2: 0/0/1 -- weight reused, psum accumulation continues
+      Case-4: 0/1/1 -- new weight tile mid-accumulation
+      Case-5: 1/0/0 -- new weight+bias tile at an oc-loop boundary
+    Every case also performs the always-on ifmap load and psum/ofmap store.
+    Per-tile segment time = max over the parallel DRAM interfaces and the
+    compute (Fig. 6(b)); psum load & store share the OBuf interface and are
+    serialized (the 2x term of Eq. 18).
+    """
+    c_tile = conv_tile_compute_cycles(hw, t) + hw.pso_sa
+    w_bits = t.weight_tile_elems() * hw.b_w
+    i_bits = t.ifmap_tile_elems(layer.s) * hw.b_i
+    p_bits = t.psum_tile_elems() * hw.b_p
+    b_bits = t.T_oc * hw.b_b if layer.has_bias else 0
+
+    t_w = ceil_div(w_bits, hw.bw_w)
+    t_wb = ceil_div(w_bits + b_bits, hw.bw_w)
+    t_i = ceil_div(i_bits, hw.bw_i)
+    t_ps = ceil_div(p_bits, hw.bw_o)           # store only
+    t_pls = ceil_div(2 * p_bits, hw.bw_o)      # load + store, shared interface
+
+    # Occurrence counts (Sec. IV-D, Case-4 derivation generalized):
+    o_case5 = m.m_oc
+    o_case4 = m.m_w_tile - m.m_oc                               # Eq. 17
+    o_case1 = m.m_oc * (m.m_spatial - 1)
+    o_case2 = (m.m_outer - m.m_spatial * m.m_oc) - o_case4
+    assert o_case1 >= 0 and o_case2 >= 0 and o_case4 >= 0
+    assert o_case1 + o_case2 + o_case4 + o_case5 == m.m_outer
+
+    seg1 = max(c_tile, t_i, t_ps)
+    seg2 = max(c_tile, t_i, t_pls)
+    seg4 = max(c_tile, t_w, t_i, t_pls)                         # Eq. 18
+    seg5 = max(c_tile, t_wb, t_i, t_ps)
+
+    total_time = (o_case1 * seg1 + o_case2 * seg2
+                  + o_case4 * seg4 + o_case5 * seg5)
+    compute = c_tile * m.m_outer
+    return max(0, total_time - compute)
+
+
+# ---------------------------------------------------------------------------
+# Top-level per-layer entry points
+# ---------------------------------------------------------------------------
+
+def simulate_conv(hw: HardwareSpec, layer: ConvLayer,
+                  t: ConvTiling | None = None,
+                  stall_model: str = "simdit") -> PerfStats:
+    """Full SimDIT Conv model. ``stall_model`` in {simdit, no_stall,
+    simplified} — the latter two reproduce the Fig. 5 baselines."""
+    if t is None:
+        t = make_conv_tiling(hw, layer)
+    m = conv_multipliers(layer, t)
+    dram = conv_dram_bits(hw, layer, t, m)
+    sram = conv_sram_bits(hw, layer, t, m)
+    compute = conv_compute_cycles(hw, layer, t, m)
+
+    if stall_model == "no_stall":
+        stall = 0
+    elif stall_model == "simplified":
+        # max of isolated totals across the four parallel components
+        t_wb = ceil_div(dram["weight"] + dram["bias"], hw.bw_w)
+        t_i = ceil_div(dram["ifmap"], hw.bw_i)
+        t_p = ceil_div(dram["psum"], hw.bw_o)
+        stall = max(0, max(compute, t_wb, t_i, t_p) - compute)
+    else:
+        stall = conv_stall_cycles(hw, layer, t, m)
+
+    macs = layer.macs
+    ops = {"mac": macs}
+    if layer.has_bias:
+        ops["add"] = layer.ofmap_elems
+    return PerfStats(engine="sa", compute_cycles=compute, stall_cycles=stall,
+                     dram_bits=dram, sram_bits=sram, ops=ops)

@@ -1,0 +1,260 @@
+"""Design-space exploration — paper Sec. VII-B.
+
+Exhaustively searches the 8-parameter space (sizes and DRAM bandwidths of
+WBuf, IBuf, OBuf, VMem) under total-SRAM and total-bandwidth budgets, with
+every candidate within +/-15% of the budgets (paper's setup).  The search
+exploits two structural properties of the model:
+
+  * separability: Conv cost depends only on (wbuf, ibuf, obuf) x
+    (bw_w, bw_i, bw_o); non-Conv cost only on (vmem) x (bw_v);
+  * tiling depends on buffer *sizes* only, so for a fixed size triple the
+    per-tile quantities (compute cycles, per-stream bits, case-occurrence
+    counts) are bandwidth-independent and the bandwidth sweep reduces to a
+    vectorized max over parallel streams (Eq. 18) per valid case.
+
+The vectorized tables are exact (tested against ``simulate_conv`` /
+``simulate_simd``), so the search is numerically identical to brute force.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .conv_model import conv_multipliers, conv_tile_compute_cycles
+from .hardware import KB, HardwareSpec
+from .layers import ConvLayer, SimdLayer
+from .simd_model import simulate_simd
+from .tiling import ceil_div, make_conv_tiling, make_simd_tiling
+
+Layer = Union[ConvLayer, SimdLayer]
+
+SIZES_KB = (32, 64, 128, 256, 512, 1024, 2048)
+BWS = (32, 64, 128, 256, 512, 1024, 2048)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized per-size-triple cost tables
+# ---------------------------------------------------------------------------
+
+class ConvTable:
+    """Bandwidth-independent per-layer quantities for fixed buffer sizes."""
+
+    def __init__(self, hw: HardwareSpec, layers: Sequence[ConvLayer]):
+        n = len(layers)
+        self.c_tile = np.zeros(n)          # compute cycles / tile (incl. PSO)
+        self.o1 = np.zeros(n); self.o2 = np.zeros(n)
+        self.o4 = np.zeros(n); self.o5 = np.zeros(n)
+        self.w_bits = np.zeros(n); self.wb_bits = np.zeros(n)
+        self.i_bits = np.zeros(n)
+        self.ps_bits = np.zeros(n); self.pls_bits = np.zeros(n)
+        for x, layer in enumerate(layers):
+            t = make_conv_tiling(hw, layer)
+            m = conv_multipliers(layer, t)
+            self.c_tile[x] = conv_tile_compute_cycles(hw, t) + hw.pso_sa
+            o5 = m.m_oc
+            o4 = m.m_w_tile - m.m_oc
+            o1 = m.m_oc * (m.m_spatial - 1)
+            o2 = (m.m_outer - m.m_spatial * m.m_oc) - o4
+            self.o1[x], self.o2[x], self.o4[x], self.o5[x] = o1, o2, o4, o5
+            w = t.weight_tile_elems() * hw.b_w
+            b = t.T_oc * hw.b_b if layer.has_bias else 0
+            self.w_bits[x] = w
+            self.wb_bits[x] = w + b
+            self.i_bits[x] = t.ifmap_tile_elems(layer.s) * hw.b_i
+            p = t.psum_tile_elems() * hw.b_p
+            self.ps_bits[x] = p
+            self.pls_bits[x] = 2 * p
+
+    def cycles(self, bw_w: int, bw_i: int, bw_o: int) -> int:
+        t_w = np.ceil(self.w_bits / bw_w)
+        t_wb = np.ceil(self.wb_bits / bw_w)
+        t_i = np.ceil(self.i_bits / bw_i)
+        t_ps = np.ceil(self.ps_bits / bw_o)
+        t_pls = np.ceil(self.pls_bits / bw_o)
+        c = self.c_tile
+        seg1 = np.maximum(np.maximum(c, t_i), t_ps)
+        seg2 = np.maximum(np.maximum(c, t_i), t_pls)
+        seg4 = np.maximum(np.maximum(np.maximum(c, t_w), t_i), t_pls)
+        seg5 = np.maximum(np.maximum(np.maximum(c, t_wb), t_i), t_ps)
+        total = (self.o1 * seg1 + self.o2 * seg2
+                 + self.o4 * seg4 + self.o5 * seg5)
+        return int(total.sum())
+
+
+class SimdTable:
+    """Bandwidth-independent SIMD quantities for a fixed VMem size."""
+
+    def __init__(self, hw: HardwareSpec, layers: Sequence[SimdLayer]):
+        rows_b4, rows_b1, rows_mhwn, rows_mc = [], [], [], []
+        self.compute = 0
+        for layer in layers:
+            t = make_simd_tiling(hw, layer)
+            st = simulate_simd(hw, layer, t, stall_model="no_stall")
+            self.compute += st.compute_cycles
+            m_h = ceil_div(layer.h, t.T_h); m_w = ceil_div(layer.w, t.T_w)
+            m_n = ceil_div(layer.n, t.T_n); m_c = ceil_div(layer.c, t.T_c)
+            v4 = t.T_h * t.T_w * t.T_n * t.T_c
+            for part in layer.parts:
+                b4 = sum(int(np.ceil(v4 * ref.scale))
+                         * (hw.b_in if ref.io == "in" else hw.b_out)
+                         for ref in part.tensors if ref.rank == "4d")
+                b1 = sum(t.T_c * (hw.b_in if ref.io == "in" else hw.b_out)
+                         for ref in part.tensors if ref.rank == "1d")
+                rows_b4.append(b4); rows_b1.append(b1)
+                rows_mhwn.append(m_h * m_w * m_n); rows_mc.append(m_c)
+        self.b4 = np.array(rows_b4, dtype=float)
+        self.b1 = np.array(rows_b1, dtype=float)
+        self.m_hwn = np.array(rows_mhwn, dtype=float)
+        self.m_c = np.array(rows_mc, dtype=float)
+
+    def cycles(self, bw_v: int) -> int:
+        stall = (np.ceil(self.b4 / bw_v) * self.m_hwn
+                 + np.where(self.b1 > 0, np.ceil(self.b1 / bw_v), 0.0)) * self.m_c
+        return int(self.compute + stall.sum())
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DSEPoint:
+    sizes_kb: Tuple[int, int, int, int]     # wbuf, ibuf, obuf, vmem
+    bws: Tuple[int, int, int, int]          # bw_w, bw_i, bw_o, bw_v
+    cycles: int
+
+    @property
+    def total_size_kb(self) -> int:
+        return sum(self.sizes_kb)
+
+    @property
+    def total_bw(self) -> int:
+        return sum(self.bws)
+
+
+@dataclass
+class DSEResult:
+    best: DSEPoint
+    worst: DSEPoint
+    points: List[DSEPoint] = field(default_factory=list)
+
+    @property
+    def improvement(self) -> float:
+        return self.worst.cycles / self.best.cycles
+
+    def within(self, frac: float) -> List[DSEPoint]:
+        lim = self.best.cycles * (1 + frac)
+        return [p for p in self.points if p.cycles <= lim]
+
+    def economic_min_sram(self, frac: float = 0.15) -> DSEPoint:
+        return min(self.within(frac), key=lambda p: (p.total_size_kb, p.cycles))
+
+    def economic_min_bw(self, frac: float = 0.15) -> DSEPoint:
+        return min(self.within(frac),
+                   key=lambda p: (p.total_bw, p.total_size_kb, p.cycles))
+
+
+def _tuples(values: Sequence[int], n: int, lo: float, hi: float
+            ) -> List[Tuple[int, ...]]:
+    return [t for t in itertools.product(values, repeat=n)
+            if lo <= sum(t) <= hi]
+
+
+class _Engine:
+    def __init__(self, hw_base: HardwareSpec, net: List[Layer]):
+        self.hw = hw_base
+        self.conv_layers = tuple(l for l in net if isinstance(l, ConvLayer))
+        self.simd_layers = tuple(l for l in net if isinstance(l, SimdLayer))
+
+    @lru_cache(maxsize=None)
+    def _conv_table(self, wbuf_kb: int, ibuf_kb: int, obuf_kb: int) -> ConvTable:
+        hw = self.hw.replace(wbuf=wbuf_kb * KB, ibuf=ibuf_kb * KB,
+                             obuf=obuf_kb * KB)
+        return ConvTable(hw, self.conv_layers)
+
+    @lru_cache(maxsize=None)
+    def _simd_table(self, vmem_kb: int) -> SimdTable:
+        return SimdTable(self.hw.replace(vmem=vmem_kb * KB), self.simd_layers)
+
+    @lru_cache(maxsize=None)
+    def conv_cycles(self, wbuf_kb: int, ibuf_kb: int, obuf_kb: int,
+                    bw_w: int, bw_i: int, bw_o: int) -> int:
+        return self._conv_table(wbuf_kb, ibuf_kb, obuf_kb).cycles(bw_w, bw_i, bw_o)
+
+    @lru_cache(maxsize=None)
+    def simd_cycles(self, vmem_kb: int, bw_v: int) -> int:
+        return self._simd_table(vmem_kb).cycles(bw_v)
+
+    def cycles(self, sz: Tuple[int, ...], bw: Tuple[int, ...]) -> int:
+        return (self.conv_cycles(sz[0], sz[1], sz[2], bw[0], bw[1], bw[2])
+                + self.simd_cycles(sz[3], bw[3]))
+
+
+def search(hw_base: HardwareSpec, net: List[Layer],
+           size_budget_kb: int, bw_budget: int,
+           sizes: Sequence[int] = SIZES_KB, bws: Sequence[int] = BWS,
+           tol: float = 0.15, lower_bound: bool = True,
+           collect: bool = True) -> DSEResult:
+    """Exhaustive DSE. ``lower_bound=False`` drops the lower budget bound
+    (used for the Fig. 11 / Table X economic-design landscape, where points
+    far below budget are of interest); with ``collect=False`` only the
+    best/worst and the within-15% frontier points are retained (streaming)."""
+    eng = _Engine(hw_base, net)
+    lo_s = size_budget_kb * (1 - tol) if lower_bound else 0
+    lo_b = bw_budget * (1 - tol) if lower_bound else 0
+    size_tuples = _tuples(sizes, 4, lo_s, size_budget_kb * (1 + tol))
+    bw_tuples = _tuples(bws, 4, lo_b, bw_budget * (1 + tol))
+    if not size_tuples or not bw_tuples:
+        raise ValueError("empty DSE space; widen grids or budgets")
+
+    best: Optional[DSEPoint] = None
+    worst: Optional[DSEPoint] = None
+    points: List[DSEPoint] = []
+    for sz in size_tuples:
+        for bw in bw_tuples:
+            cyc = eng.cycles(sz, bw)
+            if best is None or cyc < best.cycles:
+                best = DSEPoint(sz, bw, cyc)
+            if worst is None or cyc > worst.cycles:
+                worst = DSEPoint(sz, bw, cyc)
+            if collect:
+                points.append(DSEPoint(sz, bw, cyc))
+
+    if not collect:
+        # second streaming pass: keep only the 15%-of-optimal frontier
+        lim = best.cycles * 1.15
+        for sz in size_tuples:
+            for bw in bw_tuples:
+                cyc = eng.cycles(sz, bw)
+                if cyc <= lim:
+                    points.append(DSEPoint(sz, bw, cyc))
+    return DSEResult(best=best, worst=worst, points=points)
+
+
+def sensitivity(hw_opt: HardwareSpec, net: List[Layer],
+                sizes: Sequence[int] = SIZES_KB,
+                bws: Sequence[int] = BWS) -> Dict[str, Dict[int, float]]:
+    """Fig. 12: vary one parameter at a time around the optimal point;
+    report cycles normalized to the optimal."""
+    from .conv_model import simulate_conv
+
+    def cost(hw: HardwareSpec) -> int:
+        return sum((simulate_conv(hw, l) if isinstance(l, ConvLayer)
+                    else simulate_simd(hw, l)).total_cycles for l in net)
+
+    base = cost(hw_opt)
+    out: Dict[str, Dict[int, float]] = {}
+    for param, vals, unit in (
+            ("wbuf", sizes, KB), ("ibuf", sizes, KB), ("obuf", sizes, KB),
+            ("vmem", sizes, KB),
+            ("bw_w", bws, 1), ("bw_i", bws, 1), ("bw_o", bws, 1),
+            ("bw_v", bws, 1)):
+        out[param] = {}
+        for v in vals:
+            hw = hw_opt.replace(**{param: v * unit})
+            out[param][v] = cost(hw) / base
+    return out

@@ -1,0 +1,161 @@
+"""End-to-end SimDIT simulator (paper Fig. 1).
+
+Input : HardwareSpec + a layer list (DNN Specifications) [+ optional
+        externally-supplied tilings, mirroring the paper's compiler hook].
+Output: per-layer and aggregate performance statistics — cycle counts
+        (compute + DRAM stall), on-chip / off-chip access counts, op
+        counts — plus the Sec. VI energy/power rollup and a Conv vs
+        non-Conv breakdown (the paper's headline analysis, Tables VI-VII).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Union
+
+from .backward import expand_training_graph
+from .conv_model import PerfStats, simulate_conv
+from .energy import DEFAULT_ENERGY, EnergyModel, compute_energy
+from .hardware import HardwareSpec
+from .layers import ConvLayer, SimdLayer
+from .networks import NETWORKS
+from .simd_model import simulate_simd
+from .tiling import ConvTiling, SimdTiling
+
+Layer = Union[ConvLayer, SimdLayer]
+
+
+@dataclass
+class LayerReport:
+    name: str
+    engine: str
+    phase: str
+    op: str
+    stats: PerfStats
+
+
+@dataclass
+class NetworkReport:
+    layers: List[LayerReport] = field(default_factory=list)
+
+    # ---- aggregates --------------------------------------------------------
+    def _sum(self, pred, attr) -> int:
+        return sum(attr(r.stats) for r in self.layers if pred(r))
+
+    @property
+    def total_cycles(self) -> int:
+        return self._sum(lambda r: True, lambda s: s.total_cycles)
+
+    @property
+    def compute_cycles_sa(self) -> int:
+        return self._sum(lambda r: r.engine == "sa", lambda s: s.compute_cycles)
+
+    @property
+    def compute_cycles_simd(self) -> int:
+        return self._sum(lambda r: r.engine == "simd", lambda s: s.compute_cycles)
+
+    @property
+    def stall_cycles(self) -> int:
+        return self._sum(lambda r: True, lambda s: s.stall_cycles)
+
+    def cycles(self, engine: Optional[str] = None) -> int:
+        return self._sum(lambda r: engine is None or r.engine == engine,
+                         lambda s: s.total_cycles)
+
+    def dram_bits(self, engine: Optional[str] = None) -> int:
+        return self._sum(lambda r: engine is None or r.engine == engine,
+                         lambda s: s.dram_total_bits)
+
+    def sram_bits(self, engine: Optional[str] = None) -> int:
+        return self._sum(lambda r: engine is None or r.engine == engine,
+                         lambda s: s.sram_total_bits)
+
+    def sram_bits_by_buffer(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.layers:
+            for k, v in r.stats.sram_bits.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def ops(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.layers:
+            for k, v in r.stats.ops.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def nonconv_fraction(self, metric: str = "cycles") -> float:
+        """Fraction of the metric attributable to non-Conv (SIMD) layers."""
+        if metric == "cycles":
+            tot, sub = self.cycles(), self.cycles("simd")
+        elif metric == "dram":
+            tot, sub = self.dram_bits(), self.dram_bits("simd")
+        elif metric == "sram":
+            tot, sub = self.sram_bits(), self.sram_bits("simd")
+        else:
+            raise ValueError(metric)
+        return sub / tot if tot else 0.0
+
+    def energy(self, hw: HardwareSpec,
+               em: EnergyModel = DEFAULT_ENERGY) -> Dict[str, float]:
+        return compute_energy(
+            hw,
+            c_sa=self.compute_cycles_sa,
+            c_simd=self.compute_cycles_simd,
+            l_total=self.total_cycles,
+            sram_bits=self.sram_bits_by_buffer(),
+            dram_bits=self.dram_bits(),
+            em=em)
+
+    def nonconv_energy_fraction(self, hw: HardwareSpec,
+                                em: EnergyModel = DEFAULT_ENERGY) -> float:
+        """Energy attribution: SIMD compute + SIMD-side accesses vs total.
+
+        Leakage is apportioned by each engine's share of total cycles."""
+        conv = NetworkReport([r for r in self.layers if r.engine == "sa"])
+        nonc = NetworkReport([r for r in self.layers if r.engine == "simd"])
+        tot = self.energy(hw, em)["E_total"]
+        if tot <= 0:
+            return 0.0
+        e_n = compute_energy(hw, c_sa=0,
+                             c_simd=nonc.compute_cycles_simd,
+                             l_total=nonc.total_cycles,
+                             sram_bits=nonc.sram_bits_by_buffer(),
+                             dram_bits=nonc.dram_bits(), em=em)["E_total"]
+        return e_n / tot
+
+
+def simulate_network(hw: HardwareSpec, net: List[Layer],
+                     stall_model: str = "simdit",
+                     tilings: Optional[Dict[str, Union[ConvTiling, SimdTiling]]] = None,
+                     ) -> NetworkReport:
+    report = NetworkReport()
+    tilings = tilings or {}
+    for layer in net:
+        if isinstance(layer, ConvLayer):
+            stats = simulate_conv(hw, layer, tilings.get(layer.name),
+                                  stall_model=stall_model)
+            report.layers.append(LayerReport(layer.name, "sa", layer.phase,
+                                             layer.kind, stats))
+        else:
+            stats = simulate_simd(hw, layer, tilings.get(layer.name),
+                                  stall_model=stall_model)
+            report.layers.append(LayerReport(layer.name, "simd", layer.phase,
+                                             layer.op, stats))
+    return report
+
+
+def simulate(hw: HardwareSpec, network: str, mode: str = "inference",
+             batch: Optional[int] = None,
+             stall_model: str = "simdit") -> NetworkReport:
+    """Convenience entry: network name + phase -> report.
+
+    mode='inference' uses batch=1 by default; mode='training' expands the
+    graph per Table I and uses batch=32 by default (paper Sec. VII-A).
+    """
+    if batch is None:
+        batch = 1 if mode == "inference" else 32
+    # BN is a training-phase layer (Sec. V-A); inference graphs are BN-folded.
+    net = NETWORKS[network](batch, bn=(mode == "training"))
+    if mode == "training":
+        net = expand_training_graph(net)
+    return simulate_network(hw, net, stall_model=stall_model)

@@ -1,0 +1,189 @@
+"""Tiling generator: outer/inner tile template (paper Sec. IV-B).
+
+Outer tiles must fit the double-buffered on-chip SRAMs (half of each
+buffer usable); inner tiles are fixed by the compute array: the systolic
+GEMM mapping uses t_ic = J, t_oc = K, every other inner tile parameter = 1
+(paper Fig. 4); the SIMD mapping uses t_c = K, t_h = t_w = t_n = 1
+(paper Fig. 7).
+
+The generator mirrors the paper's "tiling generator that generates valid
+tiling parameters for each type of layer using the configuration of the
+hardware" (Sec. VII): it is a deterministic greedy that
+  1. keeps the full kernel window (T_kh=Kh, T_kw=Kw) when it fits and
+     shrinks kernel dims only when forced (the *training* case the paper
+     calls out, with kernels up to 223x223),
+  2. maximizes T_ic (J-aligned) to reduce psum spill, then grows T_oc
+     (K-aligned) within WBuf,
+  3. fills IBuf/OBuf with spatial/batch tile extent.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from .hardware import HardwareSpec
+from .layers import ConvLayer, SimdLayer
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _align_down(v: int, a: int) -> int:
+    return max(a, (v // a) * a) if v >= a else v
+
+
+# ---------------------------------------------------------------------------
+# Conv tiling
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ConvTiling:
+    """Outer tile sizes T_phi and inner tile sizes t_phi (paper Fig. 4)."""
+    T_oh: int; T_ow: int; T_n: int
+    T_kh: int; T_kw: int; T_ic: int; T_oc: int
+    t_ic: int; t_oc: int
+    # inner tiles for the remaining dims are 1 by construction
+
+    def ih_extent(self, s: int) -> int:
+        return (self.T_oh - 1) * s + self.T_kh
+
+    def iw_extent(self, s: int) -> int:
+        return (self.T_ow - 1) * s + self.T_kw
+
+    def weight_tile_elems(self) -> int:
+        return self.T_kh * self.T_kw * self.T_ic * self.T_oc
+
+    def ifmap_tile_elems(self, s: int) -> int:
+        return self.ih_extent(s) * self.iw_extent(s) * self.T_n * self.T_ic
+
+    def psum_tile_elems(self) -> int:
+        return self.T_oh * self.T_ow * self.T_n * self.T_oc
+
+
+def conv_tile_fits(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling) -> bool:
+    """Validity: every outer tile fits its (half, double-buffered) SRAM."""
+    if t.weight_tile_elems() * hw.b_w // 8 > hw.wbuf // 2:
+        return False
+    if t.ifmap_tile_elems(layer.s) * hw.b_i // 8 > hw.ibuf // 2:
+        return False
+    if t.psum_tile_elems() * hw.b_p // 8 > hw.obuf // 2:
+        return False
+    if layer.has_bias and t.T_oc * hw.b_b // 8 > hw.bbuf // 2:
+        return False
+    for tv, dim in ((t.T_oh, layer.oh), (t.T_ow, layer.ow), (t.T_n, layer.n),
+                    (t.T_kh, layer.kh), (t.T_kw, layer.kw),
+                    (t.T_ic, layer.ic), (t.T_oc, layer.oc)):
+        if not (1 <= tv <= dim):
+            return False
+    return True
+
+
+def make_conv_tiling(hw: HardwareSpec, layer: ConvLayer) -> ConvTiling:
+    wcap = hw.wbuf // 2 * 8 // hw.b_w          # weight elems per half-buffer
+    icap = hw.ibuf // 2 * 8 // hw.b_i
+    ocap = hw.obuf // 2 * 8 // hw.b_p
+
+    # 1) kernel window: keep full, shrink only if a single (J, K) weight
+    #    slice with the window would not fit (training-phase huge kernels).
+    T_kh, T_kw = layer.kh, layer.kw
+    j0 = min(hw.J, layer.ic)
+    k0 = min(hw.K, layer.oc)
+    while T_kh * T_kw * j0 * k0 > wcap and T_kw > 1:
+        T_kw = max(1, T_kw // 2)
+    while T_kh * T_kw * j0 * k0 > wcap and T_kh > 1:
+        T_kh = max(1, T_kh // 2)
+
+    # 2) maximize T_ic (J-aligned) with minimal T_oc, then grow T_oc.
+    T_ic = min(layer.ic, _align_down(wcap // (T_kh * T_kw * k0), hw.J))
+    T_ic = max(1, min(T_ic, layer.ic))
+    T_oc = k0
+    while T_oc * 2 <= layer.oc and T_kh * T_kw * T_ic * T_oc * 2 <= wcap:
+        T_oc *= 2
+    T_oc = min(T_oc, layer.oc)
+
+    # ifmap cap may also bound T_ic (for 1x1-spatial minimum tiles)
+    while T_ic > 1 and (T_kh * T_kw * T_ic) > icap:
+        T_ic = max(1, T_ic // 2)
+
+    # 3) spatial/batch tile growth under IBuf and OBuf.
+    T_oh = T_ow = T_n = 1
+
+    def fits(oh: int, ow: int, n: int) -> bool:
+        ih = (oh - 1) * layer.s + T_kh
+        iw = (ow - 1) * layer.s + T_kw
+        return (ih * iw * n * T_ic <= icap) and (oh * ow * n * T_oc <= ocap)
+
+    grew = True
+    while grew:
+        grew = False
+        for dim in ("ow", "oh", "n"):
+            oh, ow, n = T_oh, T_ow, T_n
+            if dim == "ow" and T_ow < layer.ow and fits(oh, min(ow * 2, layer.ow), n):
+                T_ow = min(T_ow * 2, layer.ow); grew = True
+            elif dim == "oh" and T_oh < layer.oh and fits(min(oh * 2, layer.oh), ow, n):
+                T_oh = min(T_oh * 2, layer.oh); grew = True
+            elif dim == "n" and T_n < layer.n and fits(oh, ow, min(n * 2, layer.n)):
+                T_n = min(T_n * 2, layer.n); grew = True
+
+    t = ConvTiling(T_oh=T_oh, T_ow=T_ow, T_n=T_n, T_kh=T_kh, T_kw=T_kw,
+                   T_ic=T_ic, T_oc=T_oc,
+                   t_ic=min(hw.J, T_ic), t_oc=min(hw.K, T_oc))
+    if not conv_tile_fits(hw, layer, t):
+        # Last-resort fallback: unit tiles along everything but ic/oc lanes.
+        t = ConvTiling(1, 1, 1, 1, 1, min(hw.J, layer.ic), min(hw.K, layer.oc),
+                       t_ic=min(hw.J, layer.ic), t_oc=min(hw.K, layer.oc))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# SIMD tiling
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SimdTiling:
+    T_h: int; T_w: int; T_n: int; T_c: int
+    t_c: int
+
+
+def simd_tile_bytes(hw: HardwareSpec, layer: SimdLayer, t: "SimdTiling") -> int:
+    """VMem bytes needed by the *largest* part's resident tiles."""
+    worst = 0
+    v4 = t.T_h * t.T_w * t.T_n * t.T_c
+    for part in layer.parts:
+        tot = 0
+        for ref in part.tensors:
+            if ref.rank == "4d":
+                tot += int(math.ceil(v4 * ref.scale)) * hw.b_in // 8
+            else:
+                tot += t.T_c * hw.b_in // 8
+        worst = max(worst, tot)
+    return worst
+
+
+def simd_tile_fits(hw: HardwareSpec, layer: SimdLayer, t: "SimdTiling") -> bool:
+    if not (1 <= t.T_h <= layer.h and 1 <= t.T_w <= layer.w
+            and 1 <= t.T_n <= layer.n and 1 <= t.T_c <= layer.c):
+        return False
+    return simd_tile_bytes(hw, layer, t) <= hw.vmem   # single-buffered: full VMem
+
+
+def make_simd_tiling(hw: HardwareSpec, layer: SimdLayer) -> SimdTiling:
+    T_c = min(layer.c, max(hw.K, _align_down(layer.c, hw.K)))
+    t = SimdTiling(1, 1, 1, T_c, t_c=min(hw.K, T_c))
+    while not simd_tile_fits(hw, layer, t) and t.T_c > 1:
+        t = SimdTiling(1, 1, 1, max(1, t.T_c // 2), t_c=min(hw.K, max(1, t.T_c // 2)))
+
+    grew = True
+    while grew:
+        grew = False
+        for dim in ("w", "h", "n"):
+            cand = SimdTiling(
+                T_h=min(t.T_h * 2, layer.h) if dim == "h" else t.T_h,
+                T_w=min(t.T_w * 2, layer.w) if dim == "w" else t.T_w,
+                T_n=min(t.T_n * 2, layer.n) if dim == "n" else t.T_n,
+                T_c=t.T_c, t_c=t.t_c)
+            if cand != t and simd_tile_fits(hw, layer, cand):
+                t = cand; grew = True
+    return t

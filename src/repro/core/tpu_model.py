@@ -1,0 +1,163 @@
+"""SimDIT methodology instantiated for the TPU v5e target (beyond-paper).
+
+Two pieces:
+
+1. ``RooflineTerms`` — the three-term roofline the dry-run analysis reports
+   per (arch x mesh):
+       compute    = HLO_FLOPs        / (chips * 197e12 FLOP/s)
+       memory     = HLO_bytes        / (chips * 819e9  B/s)
+       collective = collective_bytes / (chips * 50e9   B/s/link)
+   This extends the paper's stall model (max over parallel DRAM interfaces,
+   Eq. 18) with the interface class the paper's single-chip ASIC lacks: the
+   inter-chip interconnect.
+
+2. ``select_matmul_block`` — the paper's tile-based DRAM-access/stall model
+   (Secs. IV-B..D) ported from conv loops to the GEMM loop nest, used to
+   pick Pallas BlockSpec shapes: outer tiles sized to VMEM (the paper's
+   SRAM), inner tiles fixed by the MXU (the paper's J x K = 128 x 128), HBM
+   traffic per Eqs. 4/7/10 with the weight-stationary reuse argument, and
+   the per-tile segment time as max(compute, load, store) per Eq. 18.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# ---- TPU v5e-class hardware constants (per chip) ---------------------------
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW_PER_LINK = 50e9            # bytes/s per link
+MXU = 128                         # systolic dimension (the paper's J = K)
+VMEM_BYTES = 128 * 1024 * 1024    # on-chip vector memory
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    """Three-term roofline for one compiled step on one mesh."""
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW_PER_LINK)
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Paper-style segment time: max over parallel engines (Eq. 18
+        generalized to compute/HBM/ICI)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-resource roofline actually achieved by
+        the *useful* compute: t_compute / step_time."""
+        st = self.step_time
+        return self.t_compute / st if st > 0 else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes, "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "bound": self.bound,
+            "step_time_s": self.step_time,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(n_active_params: int, tokens: int, training: bool) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for a forward/serve step."""
+    return (6.0 if training else 2.0) * n_active_params * tokens
+
+
+# ---------------------------------------------------------------------------
+# GEMM block-shape selection via the paper's tile model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MatmulBlock:
+    bm: int
+    bn: int
+    bk: int
+    est_cycles: float          # model-estimated segment cycles (Eq. 18 analog)
+    hbm_bytes: float           # model-estimated HBM traffic
+
+
+def _blocks(dim: int, lo: int = 128, hi: int = 2048) -> List[int]:
+    out = []
+    b = lo
+    while b <= min(dim, hi):
+        out.append(b)
+        b *= 2
+    return out or [min(dim, lo)]
+
+
+def matmul_cost(m: int, n: int, k: int, bm: int, bn: int, bk: int,
+                bytes_in: int = 2, bytes_out: int = 2,
+                vmem: int = VMEM_BYTES) -> Optional[Tuple[float, float]]:
+    """(segment_cycles, hbm_bytes) for C[m,n] = A[m,k] @ B[k,n] tiled
+    (bm, bn, bk), or None if the working set exceeds VMEM.
+
+    Maps the paper's conv model onto the GEMM nest:
+      outer multipliers  m_m = ceil(m/bm), m_n, m_k            (Eq. 1)
+      B ("weight") traffic: each B tile loaded m_m times       (Eq. 6 analog,
+        weight-stationary order makes it 1 when bm covers m)   (Eq. 4)
+      A ("ifmap") traffic: loaded for every (m,n,k) tile       (Eq. 7)
+      C ("psum")  traffic: 2*m_k - 1 accesses per tile         (Eq. 9)
+      per-tile time = max(MXU compute, HBM streams)            (Eq. 18)
+    """
+    work = (bm * bk + bk * bn) * bytes_in + bm * bn * 4   # f32 accumulator
+    if 2 * work > vmem:                                   # double-buffered
+        return None
+    m_m = -(-m // bm); m_n = -(-n // bn); m_k = -(-k // bk)
+    # HBM bytes (whole GEMM)
+    a_bytes = bm * bk * bytes_in * m_m * m_k * m_n
+    b_bytes = bk * bn * bytes_in * m_k * m_n              # B reused across m
+    c_bytes = bm * bn * bytes_out * m_m * m_n * max(1, 2 * m_k - 1)
+    hbm = a_bytes + b_bytes + c_bytes
+    # per-tile segment cycles at MXU rate (one 128x128x128 MAC block / cycle)
+    compute = (bm / MXU) * (bn / MXU) * bk
+    hbm_cycles_per_byte = PEAK_FLOPS_BF16 / (2 * MXU * MXU) / HBM_BW
+    load = (bm * bk + bk * bn) * bytes_in * hbm_cycles_per_byte
+    store = bm * bn * bytes_out * hbm_cycles_per_byte
+    seg = max(compute, load, store)
+    total = seg * m_m * m_n * m_k
+    return total, float(hbm)
+
+
+def select_matmul_block(m: int, n: int, k: int, bytes_in: int = 2,
+                        bytes_out: int = 2,
+                        vmem: int = VMEM_BYTES) -> MatmulBlock:
+    """DSE over block shapes (the paper's Sec. VII-B applied to one GEMM)."""
+    best: Optional[MatmulBlock] = None
+    for bm in _blocks(m):
+        for bn in _blocks(n):
+            for bk in _blocks(k):
+                res = matmul_cost(m, n, k, bm, bn, bk, bytes_in, bytes_out,
+                                  vmem)
+                if res is None:
+                    continue
+                cyc, hbm = res
+                if best is None or cyc < best.est_cycles or (
+                        cyc == best.est_cycles and hbm < best.hbm_bytes):
+                    best = MatmulBlock(bm, bn, bk, cyc, hbm)
+    if best is None:   # tiny problem: single block
+        return MatmulBlock(min(m, MXU), min(n, MXU), min(k, MXU), 0.0, 0.0)
+    return best

@@ -1,0 +1,55 @@
+"""Fault tolerance: step watchdog (hang/straggler detection) and the
+restart contract.
+
+At 1000+-node scale the failure modes are (a) hard node loss — the job
+dies and the launcher restarts it; recovery = CheckpointManager.restore on
+a possibly different mesh (elastic); (b) soft hangs / stragglers — a host
+stalls inside a collective, everyone blocks.  The watchdog detects (b):
+the train loop beats once per step; if no beat arrives within ``timeout``
+the callback fires (default: checkpoint + abort, converting a silent hang
+into a restartable hard failure).  Straggler *mitigation* beyond
+detection (e.g. backup workers) is a scheduler-level concern documented in
+DESIGN.md; detection + fast restart is what the framework owns.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+
+class Watchdog:
+    def __init__(self, timeout_s: float,
+                 on_stall: Callable[[float], None]):
+        self.timeout_s = timeout_s
+        self.on_stall = on_stall
+        self._last = time.monotonic()
+        self._stop = threading.Event()
+        self._fired = False
+        self._thread: Optional[threading.Thread] = None
+
+    def beat(self) -> None:
+        self._last = time.monotonic()
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.timeout_s / 10):
+            idle = time.monotonic() - self._last
+            if idle > self.timeout_s and not self._fired:
+                self._fired = True
+                self.on_stall(idle)
+
+    def start(self) -> "Watchdog":
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=1.0)
+
+    def __enter__(self) -> "Watchdog":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

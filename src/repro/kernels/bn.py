@@ -1,0 +1,157 @@
+"""Batch-normalization Pallas kernels implementing the paper's SIMD
+schedules on the VPU:
+
+* forward: two passes (statistics, then normalize) — Sec. V-A's training
+  BN with mu/psi produced for the backward pass (Fig. 10);
+* backward: **Algorithm 1's two-part schedule** —
+    Part-1 streams (X, dY) row blocks per channel tile, emitting Xhat and
+    accumulating dgamma/dbeta in VMEM across the row sweep (the revisited
+    output block = the paper's "completed tiles ... reused in Part-2");
+    Part-2 streams (Xhat, dY) with the per-channel prefactor
+    gamma*psi/N_eff (Eq. 28) to produce dX.
+
+Layout: the 4D (H,W,N,C) tensor is flattened to (N_eff, C) rows — exactly
+the paper's reduction of the h/w/n loops to an effective batch (Sec. V-C).
+Channel tiles map to VPU lanes (the paper's t_c = K).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _stats_kernel(x_ref, sum_ref, sq_ref, *, nr: int):
+    ir = pl.program_id(1)
+
+    @pl.when(ir == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    sum_ref[...] += x.sum(0)
+    sq_ref[...] += (x * x).sum(0)
+
+
+def _norm_kernel(x_ref, mu_ref, psi_ref, g_ref, b_ref, y_ref):
+    x = x_ref[...].astype(jnp.float32)
+    y = (x - mu_ref[...]) * psi_ref[...] * g_ref[...].astype(jnp.float32) \
+        + b_ref[...].astype(jnp.float32)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def bn_forward_pallas(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                      eps: float = 1e-5, block_rows: int = 256,
+                      block_c: int = 128, interpret: bool = True):
+    """x: (N_eff, C) -> (y, mu, psi); psi = 1/sqrt(var + eps)."""
+    n, c = x.shape
+    br, bc = min(block_rows, n), min(block_c, c)
+    pr, pc = (-n) % br, (-c) % bc
+    xp = jnp.pad(x, ((0, pr), (0, pc))) if (pr or pc) else x
+    nn, cc = xp.shape
+    s, sq = pl.pallas_call(
+        functools.partial(_stats_kernel, nr=nn // br),
+        grid=(cc // bc, nn // br),
+        in_specs=[pl.BlockSpec((br, bc), lambda ic, ir: (ir, ic))],
+        out_specs=[pl.BlockSpec((bc,), lambda ic, ir: (ic,)),
+                   pl.BlockSpec((bc,), lambda ic, ir: (ic,))],
+        out_shape=[jax.ShapeDtypeStruct((cc,), jnp.float32),
+                   jax.ShapeDtypeStruct((cc,), jnp.float32)],
+        interpret=interpret,
+    )(xp)
+    mu = (s / n)[:c]
+    var = (sq / n)[:c] - mu * mu
+    psi = jax.lax.rsqrt(var + eps)
+    mu_p = jnp.pad(mu, (0, pc)) if pc else mu
+    psi_p = jnp.pad(psi, (0, pc)) if pc else psi
+    g_p = jnp.pad(gamma, (0, pc)) if pc else gamma
+    b_p = jnp.pad(beta, (0, pc)) if pc else beta
+    y = pl.pallas_call(
+        _norm_kernel,
+        grid=(cc // bc, nn // br),
+        in_specs=[pl.BlockSpec((br, bc), lambda ic, ir: (ir, ic)),
+                  pl.BlockSpec((bc,), lambda ic, ir: (ic,)),
+                  pl.BlockSpec((bc,), lambda ic, ir: (ic,)),
+                  pl.BlockSpec((bc,), lambda ic, ir: (ic,)),
+                  pl.BlockSpec((bc,), lambda ic, ir: (ic,))],
+        out_specs=pl.BlockSpec((br, bc), lambda ic, ir: (ir, ic)),
+        out_shape=jax.ShapeDtypeStruct((nn, cc), x.dtype),
+        interpret=interpret,
+    )(xp, mu_p, psi_p, g_p, b_p)
+    return y[:n, :c], mu, psi
+
+
+# ---------------------------------------------------------------------------
+# Backward — Algorithm 1
+# ---------------------------------------------------------------------------
+
+def _part1_kernel(x_ref, dy_ref, mu_ref, psi_ref,
+                  xhat_ref, dg_ref, db_ref):
+    ir = pl.program_id(1)
+
+    @pl.when(ir == 0)
+    def _init():
+        dg_ref[...] = jnp.zeros_like(dg_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    xhat = (x - mu_ref[...]) * psi_ref[...]          # Line 7 (sub, mul)
+    xhat_ref[...] = xhat.astype(xhat_ref.dtype)      # Line 9 store
+    dg_ref[...] += (dy * xhat).sum(0)                # Line 8 (mul, add)
+    db_ref[...] += dy.sum(0)                         # Line 8 (add)
+
+
+def _part2_kernel(xhat_ref, dy_ref, pref_ref, dg_ref, db_ref, dx_ref, *,
+                  n_eff: float):
+    xhat = xhat_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    # Eq. 28: dx = (gamma*psi/N) * (N*dy - dgamma*xhat - dbeta)
+    dx = pref_ref[...] * (n_eff * dy - dg_ref[...] * xhat - db_ref[...])
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+
+
+def bn_backward_pallas(x: jax.Array, dy: jax.Array, gamma: jax.Array,
+                       mu: jax.Array, psi: jax.Array,
+                       block_rows: int = 256, block_c: int = 128,
+                       interpret: bool = True):
+    """x, dy: (N_eff, C) -> (dx, dgamma, dbeta). Algorithm 1 schedule."""
+    n, c = x.shape
+    br, bc = min(block_rows, n), min(block_c, c)
+    pr, pc = (-n) % br, (-c) % bc
+    pad2 = lambda a: jnp.pad(a, ((0, pr), (0, pc))) if (pr or pc) else a
+    pad1 = lambda a: jnp.pad(a, (0, pc)) if pc else a
+    xp, dyp = pad2(x), pad2(dy)
+    nn, cc = xp.shape
+    grid = (cc // bc, nn // br)
+    row_spec = pl.BlockSpec((br, bc), lambda ic, ir: (ir, ic))
+    ch_spec = pl.BlockSpec((bc,), lambda ic, ir: (ic,))
+
+    xhat, dg, db = pl.pallas_call(
+        _part1_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, ch_spec, ch_spec],
+        out_specs=[row_spec, ch_spec, ch_spec],
+        out_shape=[jax.ShapeDtypeStruct((nn, cc), x.dtype),
+                   jax.ShapeDtypeStruct((cc,), jnp.float32),
+                   jax.ShapeDtypeStruct((cc,), jnp.float32)],
+        interpret=interpret,
+    )(xp, dyp, pad1(mu), pad1(psi))
+
+    pref = pad1(gamma.astype(jnp.float32) * psi / n)   # Line 14 (mul, div)
+    dx = pl.pallas_call(
+        functools.partial(_part2_kernel, n_eff=float(n)),
+        grid=grid,
+        in_specs=[row_spec, row_spec, ch_spec, ch_spec, ch_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((nn, cc), x.dtype),
+        interpret=interpret,
+    )(xhat, dyp, pref, dg, db)
+    return dx[:n, :c], dg[:c], db[:c]

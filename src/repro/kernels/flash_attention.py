@@ -1,0 +1,105 @@
+"""Flash-attention Pallas kernel (causal + optional sliding window, GQA).
+
+Online-softmax over KV blocks with running (max, denom, accumulator) in
+VMEM scratch — the TPU-target twin of the pure-jnp chunked attention in
+``repro.models.attention`` (which is the dry-run/CPU oracle path).  Layout:
+q (BH, S, D); k/v (BKV, S, D); the BlockSpec index map folds the GQA
+head->kv-head mapping (h // group) so no expanded K/V copy is ever
+materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: int, bq: int, bk: int,
+               nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, D)
+    k = k_ref[0]                                   # (bk, D)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    # zero fully-masked entries explicitly (guards NEG_INF - NEG_INF = 0)
+    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           n_heads: int, n_kv: int,
+                           causal: bool = True, window: int = 0,
+                           bq: int = 512, bk: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B*H, S, D); k, v: (B*KV, S, D) -> (B*H, S, D)."""
+    bh, s, d = q.shape
+    group = n_heads // n_kv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    pad_q = (-s) % bq
+    pad_k = (-s) % bk
+    qq = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kk = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vv = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0))) if pad_k else v
+    sq, sk = qq.shape[1], kk.shape[1]
+    nq, nk = sq // bq, sk // bk
+
+    def kv_index(ibh, iq, ik):
+        b = ibh // n_heads
+        h = ibh % n_heads
+        return (b * n_kv + h // group, ik, 0)
+
+    kern = functools.partial(
+        _fa_kernel, scale=1.0 / np.sqrt(d), causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[pl.BlockSpec((1, bq, d), lambda ibh, iq, ik: (ibh, iq, 0)),
+                  pl.BlockSpec((1, bk, d), kv_index),
+                  pl.BlockSpec((1, bk, d), kv_index)],
+        out_specs=pl.BlockSpec((1, bq, d), lambda ibh, iq, ik: (ibh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(qq, kk, vv)
+    return out[:, :s]

@@ -1,0 +1,52 @@
+"""Fused residual-add + RMSNorm Pallas kernel — the VPU analogue of the
+paper's representative non-Conv pipeline (Tensor-add, Sec. IV-E, fused with
+the adjacent normalization to cut the VMem round trip the paper's
+single-buffered SIMD model pays between the two ops).
+
+Rows are blocked over the grid (the paper's (h,w,n) loops); the full model
+dimension lives in one block (the paper's T_c covering C when it fits), so
+the row statistics need no cross-block reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _addnorm_kernel(x_ref, r_ref, scale_ref, y_ref, res_ref, *, eps: float):
+    s = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    res_ref[...] = s.astype(res_ref.dtype)
+    var = (s * s).mean(-1, keepdims=True)
+    y = s * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(jnp.float32)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def fused_add_rmsnorm_pallas(x: jax.Array, resid: jax.Array,
+                             scale: jax.Array, eps: float = 1e-6,
+                             block_rows: int = 256,
+                             interpret: bool = True):
+    """(x + resid) -> (rmsnorm(x+resid)*scale, x+resid). x: (rows, d)."""
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        resid = jnp.pad(resid, ((0, pad), (0, 0)))
+    n = x.shape[0] // br
+    kern = functools.partial(_addnorm_kernel, eps=eps)
+    y, res = pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                   pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((x.shape[0], d), x.dtype),
+                   jax.ShapeDtypeStruct((x.shape[0], d), x.dtype)],
+        interpret=interpret,
+    )(x, resid, scale)
+    return y[:rows], res[:rows]

@@ -1,0 +1,52 @@
+"""Systolic GEMM Pallas kernel — the MXU analogue of the paper's
+Conv/FC-as-GEMM inner-tile mapping (Sec. IV-B, Fig. 4).
+
+Grid (m/bm, n/bn, k/bk) with the reduction axis innermost, so the f32
+output block stays resident in VMEM across the k sweep (the paper's psum
+accumulation in OBuf, Eq. 9: the 2*m_k - 1 psum round trips collapse to one
+when the block is revisited) and the (bm, bk)/(bk, bn) operand tiles are
+the paper's inner tiles with t_ic = J, t_oc = K generalized to MXU blocks.
+Block shapes are chosen by ``repro.core.tpu_model.select_matmul_block`` —
+the paper's tiling DSE applied to the GEMM nest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def matmul_pallas(a: jax.Array, b: jax.Array, bm: int = 256, bn: int = 256,
+                  bk: int = 256, interpret: bool = True) -> jax.Array:
+    """C[m,n] = A[m,k] @ B[k,n], f32 accumulation, output dtype of A."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    mm, nn, kk = a.shape[0], b.shape[1], a.shape[1]
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mm // bm, nn // bn, kk // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+                  pl.BlockSpec((bk, bn), lambda i, j, s: (s, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n].astype(a.dtype)

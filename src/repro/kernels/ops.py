@@ -1,0 +1,79 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU and are validated against the ``ref`` oracles in
+interpret mode) and False on a real TPU backend.  Block shapes for the
+GEMM default to the SimDIT-TPU tile DSE (``core.tpu_model``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tpu_model import select_matmul_block
+
+from . import bn as _bn
+from . import flash_attention as _fa
+from . import fused_addnorm as _an
+from . import matmul as _mm
+from . import ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a, b, bm: int = 0, bn: int = 0, bk: int = 0,
+           interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    if not (bm and bn and bk):
+        blk = select_matmul_block(a.shape[0], b.shape[1], a.shape[1],
+                                  bytes_in=a.dtype.itemsize)
+        bm, bn, bk = blk.bm, blk.bn, blk.bk
+    return _mm.matmul_pallas(a, b, bm, bn, bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_heads", "n_kv", "causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, n_heads: int, n_kv: int, causal: bool = True,
+                    window: int = 0, bq: int = 512, bk: int = 512,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention_pallas(q, k, v, n_heads, n_kv, causal,
+                                      window, bq, bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_add_rmsnorm(x, resid, scale, block_rows: int = 256,
+                      interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _an.fused_add_rmsnorm_pallas(x, resid, scale,
+                                        block_rows=block_rows,
+                                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_c",
+                                             "interpret"))
+def bn_forward(x, gamma, beta, block_rows: int = 256, block_c: int = 128,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _bn.bn_forward_pallas(x, gamma, beta, block_rows=block_rows,
+                                 block_c=block_c, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_c",
+                                             "interpret"))
+def bn_backward(x, dy, gamma, mu, psi, block_rows: int = 256,
+                block_c: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _bn.bn_backward_pallas(x, dy, gamma, mu, psi,
+                                  block_rows=block_rows, block_c=block_c,
+                                  interpret=interpret)

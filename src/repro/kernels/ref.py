@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)
+                   ).astype(a.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        n_heads: int, n_kv: int, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """q: (B*H, S, D); k, v: (B*KV, S, D)."""
+    bh, s, d = q.shape
+    group = n_heads // n_kv
+    b = bh // n_heads
+    qh = q.reshape(b, n_heads, s, d)
+    kh = jnp.repeat(k.reshape(b, n_kv, s, d), group, axis=1)
+    vh = jnp.repeat(v.reshape(b, n_kv, s, d), group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qh, kh).astype(jnp.float32)
+    logits = logits / np.sqrt(d)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= ki <= qi
+    if window > 0:
+        ok &= ki > qi - window
+    logits = jnp.where(ok, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vh)
+    return out.reshape(bh, s, d)
+
+
+def fused_add_rmsnorm_ref(x: jax.Array, resid: jax.Array, scale: jax.Array,
+                          eps: float = 1e-6):
+    s = x.astype(jnp.float32) + resid.astype(jnp.float32)
+    var = (s * s).mean(-1, keepdims=True)
+    y = s * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype), s.astype(x.dtype)
+
+
+def bn_forward_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                   eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(0)
+    var = xf.var(0)
+    psi = jax.lax.rsqrt(var + eps)
+    y = (xf - mu) * psi * gamma.astype(jnp.float32) \
+        + beta.astype(jnp.float32)
+    return y.astype(x.dtype), mu, psi
+
+
+def bn_backward_ref(x: jax.Array, dy: jax.Array, gamma: jax.Array,
+                    mu: jax.Array, psi: jax.Array):
+    n = x.shape[0]
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    xhat = (xf - mu) * psi                         # Eq. 25
+    dgamma = (dyf * xhat).sum(0)                   # Eq. 26
+    dbeta = dyf.sum(0)                             # Eq. 27
+    dx = (gamma.astype(jnp.float32) * psi / n) * (
+        n * dyf - dgamma * xhat - dbeta)           # Eq. 28
+    return dx.astype(x.dtype), dgamma, dbeta

@@ -1,0 +1,233 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Runs named optimization variants against a cell's baseline, re-lowers,
+re-analyses, and records hypothesis -> change -> before -> after.
+
+The ``flash`` variant applies the Pallas flash-attention *cost
+substitution*: the pure-XLA chunked attention materializes its O(S x block)
+probability matrices in HBM (they exceed VMEM, so XLA cannot fuse them
+away); the Pallas kernel (repro/kernels/flash_attention.py) keeps every
+tile VMEM-resident by construction, so its HBM traffic is exactly
+q/k/v/o (+do, dq/dk/dv in backward).  Both sides of the substitution are
+computed with the SAME jaxpr walker: we measure the jnp attention's walker
+bytes per layer and replace them with the kernel-true bytes.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell qwen3_decode
+  PYTHONPATH=src python -m repro.launch.hillclimb --all
+"""
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.costmodel import jaxpr_cost
+from repro.launch.dryrun import lower_cell
+from repro.launch.shapes import SHAPES, adjust_config
+from repro.models import attention as ATT
+from repro.models.common import ModelConfig
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "hillclimb"
+
+
+# ---------------------------------------------------------------------------
+# flash-attention byte substitution
+# ---------------------------------------------------------------------------
+
+def attention_bytes_per_layer(cfg: ModelConfig, batch: int, seq: int,
+                              training: bool) -> dict:
+    """Walker bytes of one layer's jnp chunked attention vs the Pallas
+    kernel's true HBM traffic, at global shapes."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jax.ShapeDtypeStruct((batch, seq, h, hd), cfg.dtype)
+    k = jax.ShapeDtypeStruct((batch, seq, kv, hd), cfg.dtype)
+    v = jax.ShapeDtypeStruct((batch, seq, kv, hd), cfg.dtype)
+    pos = jnp.arange(seq)
+
+    def attn(q, k, v):
+        return ATT._chunked_attention_dynwin(
+            q, k, v, pos, pos, True, jnp.asarray(cfg.window),
+            cfg.attn_block)
+
+    fwd = jaxpr_cost(attn, q, k, v)
+
+    def loss(q, k, v):
+        return attn(q, k, v).astype(jnp.float32).sum()
+
+    grad = jaxpr_cost(jax.value_and_grad(loss, argnums=(0, 1, 2)), q, k, v)
+
+    el = 2  # bytes (bf16)
+    qb = batch * seq * h * hd * el
+    kb = batch * seq * kv * hd * el
+    kernel_fwd = qb + 2 * kb + qb                      # read q,k,v; write o
+    kernel_bwd = (2 * qb + 2 * kb) + qb + (qb + 2 * kb)
+    # read q,k,v,o,do; write dq,dk,dv (flash backward recomputes tiles)
+    if training:
+        # layer remat: forward + (recompute-forward + backward)
+        xla = fwd.bytes + grad.bytes
+        kernel = kernel_fwd + (kernel_fwd + kernel_bwd)
+        xla_flops = fwd.flops + grad.flops
+    else:
+        xla = fwd.bytes
+        kernel = kernel_fwd
+        xla_flops = fwd.flops
+    return {"xla_bytes": float(xla), "kernel_bytes": float(kernel),
+            "delta": float(xla - kernel), "xla_flops": float(xla_flops)}
+
+
+def block_skip_factor(seq: int, window: int) -> float:
+    """Fraction of the full S x S score work a block-skipping kernel
+    actually computes (x1.1 block-granularity overhead)."""
+    if window and 0 < window < seq:
+        valid = seq * window - window * window / 2.0
+    else:
+        valid = seq * (seq + 1) / 2.0      # causal triangle
+    return min(1.0, 1.1 * valid / (seq * seq))
+
+
+def flops_skip_delta(cfg: ModelConfig, batch: int, seq: int,
+                     training: bool) -> float:
+    """Total FLOPs removed by causal/window block skipping across layers."""
+    delta = 0.0
+    wins = [cfg.window if (cfg.attn_pattern or ("global",))[
+        i % len(cfg.attn_pattern or ("global",))] == "local" else 0
+        for i in range(cfg.n_layers)]
+    kinds = cfg.layer_kinds()
+    # one walker measurement per distinct window value
+    cache = {}
+    for i, kind in enumerate(kinds):
+        if kind != "attn":
+            continue
+        w = wins[i]
+        if w not in cache:
+            c = cfg.replace(window=w)
+            cache[w] = attention_bytes_per_layer(c, batch, seq, training)
+        factor = block_skip_factor(seq, w)
+        delta += cache[w]["xla_flops"] * (1.0 - factor)
+    return delta
+
+
+def apply_flash_substitution(record: dict, cfg: ModelConfig,
+                             shape_name: str, skip: bool = False) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return record
+    n_attn = sum(1 for kind in cfg.layer_kinds() if kind == "attn")
+    sub = attention_bytes_per_layer(cfg, shape.global_batch, shape.seq,
+                                    shape.kind == "train")
+    r = record["roofline"]
+    new_bytes = max(0.0, r["hbm_bytes"] - n_attn * sub["delta"])
+    new_flops = r["flops"]
+    if skip:
+        new_flops = max(0.0, new_flops - flops_skip_delta(
+            cfg, shape.global_batch, shape.seq, shape.kind == "train"))
+    from repro.core.tpu_model import RooflineTerms
+    terms = RooflineTerms(flops=new_flops, hbm_bytes=new_bytes,
+                          collective_bytes=r["collective_bytes"],
+                          chips=r["chips"])
+    r2 = dict(r)
+    r2.update(terms.as_dict())
+    r2["model_flops"] = r["model_flops"]
+    r2["model_flops_ratio"] = (r["model_flops"] / new_flops
+                               if new_flops else 0.0)
+    r2["flash_substitution"] = {**sub, "n_attn_layers": n_attn,
+                                "block_skip": skip}
+    out = dict(record)
+    out["roofline"] = r2
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cells x variants
+# ---------------------------------------------------------------------------
+
+CELLS = {
+    # worst roofline fraction: decode is cache-read bound AND the baseline
+    # per-device KV cache (batch/16 only) does not even fit HBM
+    "qwen3_decode": {
+        "arch": "qwen3-0.6b", "shape": "decode_32k",
+        "variants": {
+            "baseline": {},
+            "cache2d": {"rules": {"cache_seq": "model"}},
+            "cache2d+int8kv": {"rules": {"cache_seq": "model"},
+                               "cfg": {"cache_dtype": jnp.int8}},
+        },
+    },
+    # most collective/MoE-bound + worst memory blowup
+    "llama4_train": {
+        "arch": "llama4-maverick-400b-a17b", "shape": "train_4k",
+        "variants": {
+            "baseline": {},
+            "scatter": {"cfg": {"moe_dispatch": "scatter"}},
+            "onehot+blk16k": {"cfg": {"moe_block": 16384}},     # control
+            "scatter+blk16k": {"cfg": {"moe_dispatch": "scatter",
+                                       "moe_block": 16384}},
+            "scatter+blk64k": {"cfg": {"moe_dispatch": "scatter",
+                                       "moe_block": 65536}},
+        },
+    },
+    # most representative of the paper's technique (tiling/kernel DSE)
+    "gemma3_train": {
+        "arch": "gemma3-27b", "shape": "train_4k",
+        "variants": {
+            "baseline": {},
+            "flash": {"flash": True},
+            "flash+save_dots": {"flash": True,
+                                "cfg": {"remat_policy": "save_dots"}},
+            "flash+save_mixer": {"flash": True,
+                                 "cfg": {"remat_policy": "save_mixer"}},
+            "flash+blk1024": {"flash": True, "cfg": {"attn_block": 1024}},
+            "flash+skip": {"flash": True, "skip": True},
+        },
+    },
+}
+
+
+def run_cell(name: str) -> None:
+    spec = CELLS[name]
+    ART.mkdir(parents=True, exist_ok=True)
+    for vname, v in spec["variants"].items():
+        try:
+            rec, _ = lower_cell(spec["arch"], spec["shape"], False,
+                                rules_override=v.get("rules"),
+                                cfg_override=v.get("cfg"))
+            if v.get("flash"):
+                cfg = adjust_config(get_config(spec["arch"]),
+                                    SHAPES[spec["shape"]])
+                if v.get("cfg"):
+                    cfg = cfg.replace(**v["cfg"])
+                rec = apply_flash_substitution(rec, cfg, spec["shape"],
+                                               skip=v.get("skip", False))
+        except Exception as exc:   # pragma: no cover
+            rec = {"status": "error", "error": f"{type(exc).__name__}: {exc}"}
+        out = ART / f"{name}.{vname}.json"
+        out.write_text(json.dumps(rec, indent=1))
+        r = rec.get("roofline", {})
+        mem = rec.get("memory", {})
+        print(f"{name:14s} {vname:18s} "
+              f"t_comp={r.get('t_compute_s', 0):.3f} "
+              f"t_mem={r.get('t_memory_s', 0):.3f} "
+              f"t_coll={r.get('t_collective_s', 0):.4f} "
+              f"bound={r.get('bound', '?'):10s} "
+              f"frac={r.get('roofline_fraction', 0):.3f} "
+              f"temp={mem.get('temp_bytes', 0) / 1e9:.1f}GB "
+              f"{rec.get('error', '')}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    names = list(CELLS) if args.all or not args.cell else [args.cell]
+    for n in names:
+        run_cell(n)
+
+
+if __name__ == "__main__":
+    main()

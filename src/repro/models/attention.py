@@ -1,0 +1,252 @@
+"""Attention: GQA/MQA/MHA with rotary, qk-norm, sliding windows, cross
+attention, KV caching, and a memory-bounded chunked (online-softmax)
+implementation for long sequences.
+
+The chunked path scans KV blocks with a running (max, denominator)
+pair — the pure-jnp analogue of the Pallas flash kernel in
+``repro.kernels.flash_attention`` (which is the TPU-target implementation;
+this one is backend-agnostic and is what the dry-run lowers)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, ParamDef, Rules, shard
+from .layers import rms_head_norm, rope
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg: ModelConfig, lead: Tuple[int, ...] = (),
+              cross: bool = False) -> Dict:
+    la = ("layers",) * len(lead)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out = {
+        "wq": ParamDef(lead + (d, h, hd), la + ("embed", "heads", None)),
+        "wk": ParamDef(lead + (d, kv, hd), la + ("embed", "kv_heads", None)),
+        "wv": ParamDef(lead + (d, kv, hd), la + ("embed", "kv_heads", None)),
+        "wo": ParamDef(lead + (h, hd, d), la + ("heads", None, "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        out["q_norm"] = ParamDef(lead + (hd,), la + (None,), init="ones")
+        out["k_norm"] = ParamDef(lead + (hd,), la + (None,), init="ones")
+    return out
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window) -> jax.Array:
+    """(q, k) additive bias: 0 where attending is allowed, NEG_INF else.
+
+    ``window`` may be a python int or traced scalar; 0 disables windowing.
+    Negative ``k_pos`` marks invalid (unwritten cache) slots."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = dk >= 0
+    if causal:
+        ok &= dk <= dq
+    window = jnp.asarray(window)
+    ok &= jnp.where(window > 0, dk > dq - window, True)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _dense_attention(q, k, v, bias) -> jax.Array:
+    """q: (B,S,H,D); k,v: (B,T,KV,D); bias: (S,T) additive."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    qg = q.reshape(b, s, kvh, groups, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(d) + bias
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, d)
+
+
+def attention(cfg: ModelConfig, p: Dict, x: jax.Array,
+              rules: Optional[Rules],
+              kv_x: Optional[jax.Array] = None,
+              q_offset: jax.Array | int = 0,
+              cache: Optional[Dict] = None,
+              window: Optional[jax.Array] = None,
+              causal: Optional[bool] = None,
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Self- or cross-attention with optional KV cache.
+
+    * training / prefill: ``cache`` None or empty -> keys from ``x`` itself
+      (or ``kv_x`` for cross attention).
+    * decode: ``cache`` = {'k','v','pos'} ring buffer; new KV appended at
+      position ``pos`` and attention runs against the whole buffer.
+    * ``window``: scalar (traced ok) sliding-window size; 0 = full.
+    """
+    b, s, _ = x.shape
+    causal = cfg.causal if causal is None else causal
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"])
+    q = shard(q, rules, "batch", "seq", "act_heads", None)
+    k = shard(k, rules, "batch", "seq", "cache_heads", None)
+    v = shard(v, rules, "batch", "seq", "cache_heads", None)
+
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+
+    if cache is not None:
+        q_offset = cache["pos"]
+    q_pos = q_offset + jnp.arange(s)
+    if kv_x is None:
+        k_pos_new = q_pos
+        q = rope(q, jnp.broadcast_to(q_pos, (b, s)), cfg.rope_theta,
+                 cfg.rope_fraction)
+        k = rope(k, jnp.broadcast_to(k_pos_new, (b, s)), cfg.rope_theta,
+                 cfg.rope_fraction)
+    else:
+        k_pos_new = jnp.arange(src.shape[1])
+
+    new_cache = None
+    if cache is not None:
+        # append at pos (decode or staged prefill); int8 caches quantize on
+        # write with per-(token, kv-head) dynamic scales stored alongside
+        pos = cache["pos"]
+        int8 = cache["k"].dtype == jnp.int8
+        dus = jax.lax.dynamic_update_slice_in_dim
+        if int8:
+            def enc(x):
+                scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                                keepdims=True) / 127.0
+                scale = jnp.maximum(scale, 1e-8)
+                q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                             -127, 127).astype(jnp.int8)
+                return q, scale[..., 0].astype(jnp.float32)
+
+            k8, ks = enc(k)
+            v8, vs = enc(v)
+            ck = dus(cache["k"], k8, pos, axis=1)
+            cv = dus(cache["v"], v8, pos, axis=1)
+            cks = dus(cache["k_scale"], ks, pos, axis=1)
+            cvs = dus(cache["v_scale"], vs, pos, axis=1)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                         "pos": pos + s}
+            k = (ck.astype(cfg.dtype)
+                 * cks[..., None].astype(cfg.dtype))
+            v = (cv.astype(cfg.dtype)
+                 * cvs[..., None].astype(cfg.dtype))
+        else:
+            ck = dus(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            cv = dus(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            new_cache = {"k": ck, "v": cv, "pos": pos + s}
+            k, v = ck, cv
+        t = ck.shape[1]
+        k_pos = jnp.arange(t)
+        valid = k_pos < (pos + s)
+        k_pos = jnp.where(valid, k_pos, -10 ** 9)
+    else:
+        k_pos = k_pos_new
+        k_pos = jnp.asarray(k_pos)
+
+    w = window if window is not None else jnp.asarray(cfg.window)
+    t = k.shape[1]
+    if s == 1 or (s <= cfg.dense_attn_max_seq and t <= cfg.dense_attn_max_seq):
+        bias = _mask_bias(q_pos, k_pos, causal, w)
+        out = _dense_attention(q, k, v, bias)
+    else:
+        out = _chunked_attention_dynwin(q, k, v, q_pos, k_pos, causal, w,
+                                        cfg.attn_block)
+    out = shard(out, rules, "batch", "seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(y, rules, "batch", "seq", "act_embed"), new_cache
+
+
+def _chunked_attention_dynwin(q, k, v, q_pos, k_pos, causal, window, block):
+    """Chunked attention where ``window`` may be a traced scalar."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    groups = h // kvh
+    nblk = -(-t // block)
+    pad = nblk * block - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-10 ** 9)
+    kb = k.reshape(b, nblk, block, kvh, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block, kvh, d).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(nblk, block)
+    qg = q.reshape(b, s, kvh, groups, d)
+    scale = 1.0 / np.sqrt(d)
+
+    def bias_fn(pc):
+        dq = q_pos[:, None]
+        dk = pc[None, :]
+        ok = jnp.ones((s, pc.shape[0]), bool)
+        if causal:
+            ok &= dk <= dq
+        ok &= jnp.where(window > 0, dk > dq - window, True)
+        ok &= dk >= 0
+        return jnp.where(ok, 0.0, NEG_INF)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, kc).astype(jnp.float32)
+        logits = logits * scale + bias_fn(pc)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(q.dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, groups, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, groups, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, groups, s, d), jnp.float32)
+    # checkpoint each KV-block step: the backward pass then saves only the
+    # O(S*D) running carries and recomputes the O(S*block) probability
+    # matrices per block — the flash-attention memory contract
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kb, vb, pb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def attend_precomputed(cfg: ModelConfig, p: Dict, x: jax.Array,
+                       k: jax.Array, v: jax.Array,
+                       rules: Optional[Rules]) -> jax.Array:
+    """Cross-attention against precomputed (encoder) K/V — no append, no
+    mask (every encoder position is valid), no rope."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = shard(q, rules, "batch", "seq", "act_heads", None)
+    t = k.shape[1]
+    bias = jnp.zeros((x.shape[1], t), jnp.float32)
+    out = _dense_attention(q, k, v, bias)
+    out = shard(out, rules, "batch", "seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(y, rules, "batch", "seq", "act_embed")
+
+
+def init_kv_cache(cfg: ModelConfig, n_layers: int, batch: int,
+                  max_len: int, rules: Optional[Rules] = None) -> Dict:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    shape = (n_layers, batch, max_len, kv, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def kv_cache_specs(cfg: ModelConfig, n_layers: int, batch: int,
+                   max_len: int) -> Dict:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    shape = (n_layers, batch, max_len, kv, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, cfg.dtype),
+        "v": jax.ShapeDtypeStruct(shape, cfg.dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,44 @@
+"""Modality frontend STUBS (per the assignment: ``[audio]``/``[vlm]``
+entries specify the transformer backbone only; ``input_specs()`` provides
+precomputed frame/patch embeddings).
+
+* whisper-tiny: the conv1d mel frontend is stubbed — the model consumes
+  precomputed frame embeddings (batch, encoder_seq=1500, d_model).
+* pixtral-12b: the Pixtral ViT is stubbed — the model consumes precomputed
+  patch embeddings (batch, n_patches, d_model) prepended to the token
+  stream (early fusion).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+
+def frontend_input_specs(cfg: ModelConfig, batch: int) -> Dict:
+    """Extra abstract inputs the stubbed frontends inject."""
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.encoder_layers > 0:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.n_patches > 0:
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), cfg.dtype)
+    return out
+
+
+def synth_frontend_inputs(cfg: ModelConfig, batch: int,
+                          rng: Optional[jax.Array] = None) -> Dict:
+    """Concrete synthetic embeddings for smoke tests/examples."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    out: Dict[str, jax.Array] = {}
+    if cfg.encoder_layers > 0:
+        out["frames"] = jax.random.normal(
+            rng, (batch, cfg.encoder_seq, cfg.d_model), cfg.dtype) * 0.02
+    if cfg.n_patches > 0:
+        out["patches"] = jax.random.normal(
+            rng, (batch, cfg.n_patches, cfg.d_model), cfg.dtype) * 0.02
+    return out

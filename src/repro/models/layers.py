@@ -1,0 +1,117 @@
+"""Shared neural layers: norms, MLPs, rotary embeddings, embedding/head."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamDef, Rules, shard
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+
+def norm_defs(cfg: ModelConfig, d: int, lead: Tuple[int, ...] = ()) -> Dict:
+    lead_axes = ("layers",) * len(lead)
+    out = {"scale": ParamDef(lead + (d,), lead_axes + (None,), init="ones")}
+    if cfg.norm_type == "layernorm":
+        out["bias"] = ParamDef(lead + (d,), lead_axes + (None,), init="zeros")
+    return out
+
+
+def apply_norm(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array) -> jax.Array:
+    """Per-head RMS norm over the last (head_dim) axis (qk-norm)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, lead: Tuple[int, ...] = ()) -> Dict:
+    la = ("layers",) * len(lead)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi": ParamDef(lead + (d, f), la + ("embed", "ff")),
+        "wg": ParamDef(lead + (d, f), la + ("embed", "ff")),
+        "wo": ParamDef(lead + (f, d), la + ("ff", "embed")),
+    }
+
+
+def _act(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x) if cfg.act == "gelu" else jax.nn.silu(x)
+
+
+def apply_mlp(cfg: ModelConfig, p: Dict, x: jax.Array,
+              rules: Optional[Rules]) -> jax.Array:
+    h = _act(cfg, x @ p["wg"]) * (x @ p["wi"])
+    h = shard(h, rules, "batch", "seq", "act_ff")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (partial-fraction support)
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float,
+         fraction: float = 1.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions: (B, S) -> angles (B, S, 1, half), broadcast over heads
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig) -> Dict:
+    out = {"embedding": ParamDef((cfg.vocab_size, cfg.d_model),
+                                 ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        out["head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                               ("embed", "vocab"))
+    return out
+
+
+def embed_tokens(p: Dict, tokens: jax.Array, rules: Optional[Rules],
+                 dtype) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(dtype)
+    return shard(x, rules, "batch", "seq", "act_embed")
+
+
+def lm_logits(p: Dict, x: jax.Array, rules: Optional[Rules]) -> jax.Array:
+    w = p.get("head")
+    if w is None:
+        w = p["embedding"].T
+    logits = (x @ w).astype(jnp.float32)
+    return shard(logits, rules, "batch", "seq", "vocab")

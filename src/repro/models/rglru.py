@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+  r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+  a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over the per-step affine maps
+(h -> a*h + b composes associatively), giving O(log S) depth; decode is the
+single-step recurrence on the cached state.  The block follows Griffin's
+recurrent block: linear in, short causal conv, RG-LRU, gated output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamDef, Rules, shard
+from .ssm import _causal_conv
+
+C_FACTOR = 8.0
+
+
+def rglru_defs(cfg: ModelConfig, lead: Tuple[int, ...] = ()) -> Dict:
+    la = ("layers",) * len(lead)
+    d = cfg.d_model
+    r = cfg.rnn_width or d
+    return {
+        "w_x": ParamDef(lead + (d, r), la + ("embed", "rnn")),
+        "w_gate": ParamDef(lead + (d, r), la + ("embed", "rnn")),
+        "conv_w": ParamDef(lead + (cfg.conv_width, r), la + ("conv", "rnn"),
+                           init="normal", scale=1.0),
+        "w_r": ParamDef(lead + (r, r), la + ("rnn", None)),
+        "w_i": ParamDef(lead + (r, r), la + ("rnn", None)),
+        "lam": ParamDef(lead + (r,), la + ("rnn",), init="ones"),
+        "w_out": ParamDef(lead + (r, d), la + ("rnn", "embed")),
+    }
+
+
+def _rglru_scan(x: jax.Array, a: jax.Array,
+                h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """x, a: (B,S,R) f32. h_t = a_t h_{t-1} + x_t via associative scan."""
+    if h0 is not None:
+        # fold initial state into the first step
+        x = x.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return hh, hh[:, -1]
+
+
+def apply_rglru(cfg: ModelConfig, p: Dict, u: jax.Array,
+                rules: Optional[Rules],
+                state: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """u: (B,S,d); state (decode): {'h': (B,R), 'conv': (B,W-1,R)}."""
+    b, s, _ = u.shape
+    x = u @ p["w_x"]
+    gate = jax.nn.gelu(u @ p["w_gate"])
+    conv_state = None if state is None else state["conv"]
+    x, new_conv = _causal_conv(x, p["conv_w"], conv_state)
+    x = shard(x, rules, "batch", "seq", "rnn")
+
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    inp = beta * (i * xf)
+
+    h0 = None if state is None else state["h"]
+    if s == 1 and state is not None:
+        h = a[:, 0] * h0 + inp[:, 0]
+        hh = h[:, None]
+        h_last = h
+    else:
+        hh, h_last = _rglru_scan(inp, a, h0)
+    y = (hh.astype(u.dtype) * gate) @ p["w_out"]
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_last, "conv": new_conv}
+    return shard(y, rules, "batch", "seq", "act_embed"), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, n_layers: int, batch: int) -> Dict:
+    r = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((n_layers, batch, r), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_width - 1, r),
+                          jnp.float32),
+    }

@@ -1,0 +1,182 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Training path: chunked SSD — within-chunk quadratic (attention-like) term
+plus an inter-chunk linear recurrence over the (H, P, N) state, implemented
+with a ``lax.scan`` over chunks.  Decode path: single-step recurrence over
+the cached state.  The chunk matmuls are GEMM-shaped (the systolic/MXU case
+of the paper's model); the recurrence is the non-Conv/VPU case.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamDef, Rules, shard
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state
+
+
+def ssm_defs(cfg: ModelConfig, lead: Tuple[int, ...] = ()) -> Dict:
+    la = ("layers",) * len(lead)
+    d = cfg.d_model
+    di, h, n = ssm_dims(cfg)
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": ParamDef(lead + (d, 2 * di + 2 * n + h),
+                         la + ("embed", "rnn")),
+        "conv_w": ParamDef(lead + (cfg.conv_width, di + 2 * n),
+                           la + ("conv", "rnn"), init="normal", scale=1.0),
+        "a_log": ParamDef(lead + (h,), la + ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamDef(lead + (h,), la + ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef(lead + (h,), la + ("ssm_heads",), init="ones"),
+        "norm_scale": ParamDef(lead + (di,), la + ("rnn",), init="ones"),
+        "w_out": ParamDef(lead + (di, d), la + ("rnn", "embed")),
+    }
+
+
+def _split(cfg: ModelConfig, proj: jax.Array):
+    di, h, n = ssm_dims(cfg)
+    z = proj[..., :di]
+    x = proj[..., di:2 * di]
+    bb = proj[..., 2 * di:2 * di + n]
+    cc = proj[..., 2 * di + n:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return z, x, bb, cc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv, width W. x: (B,S,C), w: (W,C).
+    Returns (y, new_state) with state = last W-1 inputs."""
+    wlen = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(wlen))
+    new_state = xp[:, -(wlen - 1):, :] if wlen > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def _gated_rmsnorm(scale: jax.Array, x: jax.Array, z: jax.Array) -> jax.Array:
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(xh, dt, a_log, bb, cc, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P); dt: (B,S,H) post-softplus; a_log: (H,) (A = -exp(a_log));
+    bb, cc: (B,S,N) (single group, broadcast over heads).
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, h, p = xh.shape
+    n = bb.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    t = xh.shape[1]
+    nc = t // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                   # (H,)
+    # per-step log decay: (B, T, H)
+    la = dt.astype(jnp.float32) * a
+    xc = xh.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    lac = la.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    bc = bb.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    ccn = cc.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def chunk_fn(state, blk):
+        xk, dtk, lak, bk, ck = blk                  # (B,chunk,...) each
+        cum = jnp.cumsum(lak, axis=1)               # (B,L,H)
+        # intra-chunk "attention": M[i,j] = exp(cum_i - cum_j) * (i >= j)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]        # (B,L,L,H)
+        ii = jnp.arange(chunk)
+        causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        m = jnp.where(causal, jnp.exp(diff), 0.0)
+        g = jnp.einsum("bln,bmn->blm", ck.astype(jnp.float32),
+                       bk.astype(jnp.float32))                # (B,L,L)
+        w = m * g[..., None]                                  # (B,L,L,H)
+        xdt = xk.astype(jnp.float32) * dtk[..., None].astype(jnp.float32)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", w, xdt)
+        # inter-chunk: contribution of incoming state
+        y_state = jnp.einsum("bln,blh,bhpn->blhp",
+                             ck.astype(jnp.float32), jnp.exp(cum), state)
+        # state update
+        tail = cum[:, -1:, :] - cum                           # (B,L,H)
+        sx = jnp.einsum("bln,blh,blhp->bhpn", bk.astype(jnp.float32),
+                        jnp.exp(tail) * dtk.astype(jnp.float32),
+                        xk.astype(jnp.float32))
+        new_state = state * jnp.exp(cum[:, -1, :])[..., None, None] + sx
+        return new_state, (y_intra + y_state)
+
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+    final, ys = jax.lax.scan(chunk_fn, state0, (xc, dtc, lac, bc, ccn))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)[:, :s]
+    return y, final
+
+
+def apply_ssm(cfg: ModelConfig, p: Dict, u: jax.Array,
+              rules: Optional[Rules],
+              state: Optional[Dict] = None,
+              chunk: int = 256) -> Tuple[jax.Array, Optional[Dict]]:
+    """u: (B,S,d). state (decode): {'ssm': (B,H,P,N), 'conv': (B,W-1,C)}."""
+    b, s, _ = u.shape
+    di, h, n = ssm_dims(cfg)
+    proj = u @ p["w_in"]
+    z, x, bb, cc, dt = _split(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xbc = jnp.concatenate([x, bb, cc], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    x, bb, cc = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    xh = x.reshape(b, s, h, cfg.ssm_head_dim)
+    xh = shard(xh, rules, "batch", "seq", "ssm_heads", None)
+
+    init = None if state is None else state["ssm"]
+    if s == 1 and state is not None:
+        # single-step recurrence (decode)
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))
+        dt1 = dt[:, 0]                                        # (B,H)
+        decay = jnp.exp(dt1 * a)                              # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt1,
+                         xh[:, 0].astype(jnp.float32),
+                         bb[:, 0].astype(jnp.float32))
+        new_state = init * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cc[:, 0].astype(jnp.float32),
+                       new_state)[:, None]
+        final = new_state
+    else:
+        y, final = ssd_chunked(xh, dt, p["a_log"], bb, cc, chunk, init)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(
+        jnp.float32)[:, None]
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = _gated_rmsnorm(p["norm_scale"], y, z)
+    out = y @ p["w_out"]
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": final, "conv": new_conv}
+    return shard(out, rules, "batch", "seq", "act_embed"), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, n_layers: int, batch: int) -> Dict:
+    di, h, n = ssm_dims(cfg)
+    return {
+        "ssm": jnp.zeros((n_layers, batch, h, cfg.ssm_head_dim, n),
+                         jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_width - 1, di + 2 * n),
+                          jnp.float32),
+    }

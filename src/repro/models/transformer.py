@@ -1,0 +1,450 @@
+"""Unified model: assembles attention / Mamba2 / RG-LRU mixers with dense /
+MoE FFNs into layer stacks, supporting all ten assigned architectures.
+
+Layer stacking: the layer list is ``cfg.pattern`` repeated.  Layers are
+grouped so each *pattern position* forms a homogeneous stack scanned with
+``lax.scan`` over ``G = n_layers // len(pattern)`` groups (stacked params ->
+small HLO, fast compile); the remainder ``n_layers % len(pattern)`` layers
+are unrolled.  Per-layer scalars that vary within a homogeneous stack (the
+gemma3 5:1 local:global window schedule) ride along as scan xs.
+
+Caches mirror the parameter structure: ``cache['blk<i>']`` holds the stacked
+per-layer state for pattern position i (KV ring buffer for attention, SSD
+state for mamba2, recurrent state for RG-LRU), ``cache['rem<j>']`` the
+unrolled remainder, ``cache['cross']`` the encoder KV for enc-dec models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property, partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as ATT
+from . import moe as MOE
+from . import rglru as RG
+from . import ssm as SSM
+from .common import (ModelConfig, ParamDef, Rules, abstract_params,
+                     init_params, param_specs, shard)
+from .layers import (apply_mlp, apply_norm, embed_defs, embed_tokens,
+                     lm_logits, mlp_defs, norm_defs)
+
+
+def _mixer_kind(entry: str) -> str:
+    return entry.split("+")[0]
+
+
+def _is_moe(entry: str) -> bool:
+    return entry.endswith("+moe")
+
+
+def _block_defs(cfg: ModelConfig, entry: str, lead: Tuple[int, ...],
+                cross: bool) -> Dict:
+    kind = _mixer_kind(entry)
+    defs: Dict[str, Any] = {"norm1": norm_defs(cfg, cfg.d_model, lead)}
+    if kind == "attn":
+        defs["attn"] = ATT.attn_defs(cfg, lead)
+    elif kind == "mamba2":
+        defs["ssm"] = SSM.ssm_defs(cfg, lead)
+    elif kind == "rglru":
+        defs["rglru"] = RG.rglru_defs(cfg, lead)
+    else:
+        raise ValueError(kind)
+    if cross:
+        defs["xnorm"] = norm_defs(cfg, cfg.d_model, lead)
+        defs["xattn"] = ATT.attn_defs(cfg, lead, cross=True)
+    if cfg.d_ff > 0:
+        defs["norm2"] = norm_defs(cfg, cfg.d_model, lead)
+        defs["mlp"] = (MOE.moe_defs(cfg, lead) if _is_moe(entry)
+                       else mlp_defs(cfg, lead))
+    return defs
+
+
+def _apply_block(cfg: ModelConfig, entry: str, p: Dict, x: jax.Array,
+                 rules: Optional[Rules], *,
+                 window=None, cache: Optional[Dict] = None,
+                 enc_out: Optional[jax.Array] = None,
+                 causal: Optional[bool] = None,
+                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    kind = _mixer_kind(entry)
+    aux = jnp.zeros((), jnp.float32)
+    # split the cached cross-attention KV (it is read-only) from the
+    # mixer's own mutable state
+    cross_kv = None
+    mix_cache = cache
+    if cache is not None and "_cross" in cache:
+        cross_kv = cache["_cross"]
+        mix_cache = {k: v for k, v in cache.items() if k != "_cross"}
+    h = apply_norm(cfg, p["norm1"], x)
+    new_cache: Optional[Dict] = None
+    if kind == "attn":
+        mix, new_cache = ATT.attention(cfg, p["attn"], h, rules,
+                                       cache=mix_cache, window=window,
+                                       causal=causal)
+    elif kind == "mamba2":
+        mix, new_cache = SSM.apply_ssm(cfg, p["ssm"], h, rules,
+                                       state=mix_cache)
+    else:
+        mix, new_cache = RG.apply_rglru(cfg, p["rglru"], h, rules,
+                                        state=mix_cache)
+    # named for selective remat: the 'save_mixer' policy keeps this (small,
+    # (B,S,d)) tensor and skips recomputing the whole mixer in backward
+    from jax.ad_checkpoint import checkpoint_name
+    mix = checkpoint_name(mix, "mixer_out")
+    x = x + mix
+    if "xattn" in p:
+        hx = apply_norm(cfg, p["xnorm"], x)
+        if cross_kv is not None:
+            ymix = ATT.attend_precomputed(cfg, p["xattn"], hx,
+                                          cross_kv["k"], cross_kv["v"],
+                                          rules)
+        else:
+            ymix, _ = ATT.attention(cfg, p["xattn"], hx, rules,
+                                    kv_x=enc_out, causal=False)
+        x = x + ymix
+    if cross_kv is not None and new_cache is not None:
+        new_cache = dict(new_cache, _cross=cross_kv)
+    if cfg.d_ff > 0:
+        h2 = apply_norm(cfg, p["norm2"], x)
+        if _is_moe(entry):
+            ff, aux = MOE.apply_moe(cfg, p["mlp"], h2, rules)
+        else:
+            ff = apply_mlp(cfg, p["mlp"], h2, rules)
+        x = x + ff
+    return x, new_cache, aux
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- structure ---------------------------------------------------------
+    @property
+    def pat(self) -> Tuple[str, ...]:
+        return self.cfg.pattern
+
+    @property
+    def groups(self) -> int:
+        return self.cfg.n_layers // len(self.pat)
+
+    @property
+    def remainder(self) -> int:
+        return self.cfg.n_layers % len(self.pat)
+
+    def _windows(self) -> np.ndarray:
+        """Per-layer window sizes from cfg.attn_pattern (0 = full)."""
+        cfg = self.cfg
+        pat = cfg.attn_pattern or ("global",)
+        return np.array(
+            [cfg.window if pat[i % len(pat)] == "local" else 0
+             for i in range(cfg.n_layers)], np.int32)
+
+    def _entry_layers(self, gi: int) -> np.ndarray:
+        """Absolute layer indices covered by pattern position gi."""
+        plen = len(self.pat)
+        return np.arange(self.groups) * plen + gi
+
+    # ---- params ------------------------------------------------------------
+    def param_defs(self) -> Dict:
+        cfg = self.cfg
+        cross = cfg.encoder_layers > 0
+        defs: Dict[str, Any] = {"embed": embed_defs(cfg)}
+        if cfg.learned_pos:
+            defs["pos_emb"] = ParamDef((cfg.learned_pos, cfg.d_model),
+                                       ("pos", "embed"))
+        for gi, entry in enumerate(self.pat):
+            if self.groups > 0:
+                defs[f"blk{gi}"] = _block_defs(cfg, entry, (self.groups,),
+                                               cross)
+        for j in range(self.remainder):
+            defs[f"rem{j}"] = _block_defs(cfg, self.pat[j], (), cross)
+        defs["final_norm"] = norm_defs(cfg, cfg.d_model)
+        if cross:
+            defs["enc"] = {
+                "blk": _block_defs(cfg, "attn", (cfg.encoder_layers,), False),
+                "norm": norm_defs(cfg, cfg.d_model),
+                "pos_emb": ParamDef((cfg.encoder_seq, cfg.d_model),
+                                    ("pos", "embed")),
+            }
+        return defs
+
+    def init(self, rng: jax.Array):
+        return init_params(rng, self.param_defs(), self.cfg.dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_defs(), self.cfg.dtype)
+
+    def specs(self, rules: Optional[Rules]):
+        return param_specs(self.param_defs(), rules)
+
+    # ---- encoder (enc-dec only) ---------------------------------------------
+    def encode(self, params: Dict, frames: jax.Array,
+               rules: Optional[Rules]) -> jax.Array:
+        cfg = self.cfg
+        x = frames.astype(cfg.dtype)
+        x = x + params["enc"]["pos_emb"][:x.shape[1]].astype(cfg.dtype)
+        blk = params["enc"]["blk"]
+
+        def step(carry, pslice):
+            y, _, _ = _apply_block(cfg, "attn", pslice, carry, rules,
+                                   causal=False)
+            return y, None
+
+        body = jax.checkpoint(step) if cfg.remat else step
+        x, _ = jax.lax.scan(body, x, blk)
+        return apply_norm(cfg, params["enc"]["norm"], x)
+
+    # ---- main stacks ---------------------------------------------------------
+    def _run_stack(self, params: Dict, x: jax.Array, rules: Optional[Rules],
+                   cache: Optional[Dict], enc_out: Optional[jax.Array]
+                   ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+        cfg = self.cfg
+        wins = self._windows()
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache: Dict[str, Any] = {} if cache is not None else None
+
+        if self.groups > 0:
+            def group_step(carry, xs):
+                y, aux = carry
+                # the scan carry is what remat saves per layer group:
+                # sequence-shard it (Megatron-SP) to cut saved-activation HBM
+                y = shard(y, rules, "batch", "seq_resid", "act_embed")
+                updated = []
+                for gi, entry in enumerate(self.pat):
+                    pslice, win, csl = xs[gi]
+                    y, nc, a = _apply_block(
+                        cfg, entry, pslice, y, rules, window=win,
+                        cache=csl, enc_out=enc_out)
+                    updated.append(nc)
+                    aux = aux + a
+                return (y, aux), tuple(updated)
+
+            xs = []
+            for gi, entry in enumerate(self.pat):
+                win = jnp.asarray(wins[self._entry_layers(gi)])
+                csl = None if cache is None else cache[f"blk{gi}"]
+                xs.append((params[f"blk{gi}"], win, csl))
+            if cfg.remat and cfg.remat_policy == "save_dots":
+                # selective remat: matmul outputs are saved, elementwise
+                # recomputed — trades HBM for less recompute FLOPs
+                body = jax.checkpoint(
+                    group_step,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            elif cfg.remat and cfg.remat_policy == "save_mixer":
+                # save only the (B,S,d) mixer outputs: skips the attention
+                # recompute at ~1 residual-stream tensor per layer of HBM
+                body = jax.checkpoint(
+                    group_step,
+                    policy=jax.checkpoint_policies.save_only_these_names(
+                        "mixer_out"))
+            elif cfg.remat:
+                body = jax.checkpoint(group_step)
+            else:
+                body = group_step
+            (x, aux_total), upd = jax.lax.scan(body, (x, aux_total),
+                                               tuple(xs))
+            if cache is not None:
+                for gi in range(len(self.pat)):
+                    new_cache[f"blk{gi}"] = upd[gi]
+
+        base = self.groups * len(self.pat)
+        for j in range(self.remainder):
+            entry = self.pat[j]
+            csl = None if cache is None else cache[f"rem{j}"]
+            x, nc, a = _apply_block(
+                cfg, entry, params[f"rem{j}"], x, rules,
+                window=jnp.asarray(wins[base + j]), cache=csl,
+                enc_out=enc_out)
+            aux_total = aux_total + a
+            if cache is not None:
+                new_cache[f"rem{j}"] = nc
+        return x, new_cache, aux_total
+
+    # ---- forward -------------------------------------------------------------
+    def forward(self, params: Dict, tokens: jax.Array,
+                rules: Optional[Rules] = None,
+                frames: Optional[jax.Array] = None,
+                patches: Optional[jax.Array] = None,
+                cache: Optional[Dict] = None,
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+        """Returns (logits_f32, new_cache, moe_aux_loss)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, rules, cfg.dtype)
+        if patches is not None:
+            x = jnp.concatenate([patches.astype(cfg.dtype), x], axis=1)
+        if cfg.learned_pos:
+            off = cache["pos_offset"] if (cache is not None
+                                          and "pos_offset" in cache) else 0
+            pos = off + jnp.arange(x.shape[1])
+            x = x + jnp.take(params["pos_emb"], pos, axis=0).astype(cfg.dtype)
+
+        enc_out = None
+        if cfg.encoder_layers > 0 and frames is not None:
+            enc_out = self.encode(params, frames, rules)
+
+        x, new_cache, aux = self._run_stack(params, x, rules, cache, enc_out)
+        if cache is not None and "pos_offset" in cache:
+            new_cache["pos_offset"] = cache["pos_offset"] + x.shape[1]
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(params["embed"], x, rules)
+        return logits, new_cache, aux
+
+    # ---- loss ------------------------------------------------------------------
+    def _final_hidden(self, params: Dict, tokens: jax.Array,
+                      rules: Optional[Rules],
+                      frames=None, patches=None
+                      ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, rules, cfg.dtype)
+        if patches is not None:
+            x = jnp.concatenate([patches.astype(cfg.dtype), x], axis=1)
+        if cfg.learned_pos:
+            pos = jnp.arange(x.shape[1])
+            x = x + jnp.take(params["pos_emb"], pos, axis=0).astype(cfg.dtype)
+        enc_out = None
+        if cfg.encoder_layers > 0 and frames is not None:
+            enc_out = self.encode(params, frames, rules)
+        x, _, aux = self._run_stack(params, x, rules, None, enc_out)
+        return apply_norm(cfg, params["final_norm"], x), aux
+
+    def loss(self, params: Dict, batch: Dict,
+             rules: Optional[Rules] = None) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        patches = batch.get("patches")
+        x, aux = self._final_hidden(params, tokens, rules,
+                                    frames=batch.get("frames"),
+                                    patches=patches)
+        if patches is not None:
+            x = x[:, patches.shape[1]:]
+        targets = tokens[:, 1:]
+        x = x[:, :-1]
+        w = params["embed"].get("head")
+        if w is None:
+            w = params["embed"]["embedding"].T
+
+        def ce_of(xc, tc):
+            logits = shard((xc @ w).astype(jnp.float32), rules,
+                           "batch", None, "vocab")
+            return -jnp.take_along_axis(
+                jax.nn.log_softmax(logits, axis=-1), tc[..., None],
+                axis=-1).squeeze(-1)
+
+        chunk = cfg.ce_chunk
+        s = x.shape[1]
+        if chunk and s > chunk:
+            pad = (-s) % chunk
+            xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            tp = jnp.pad(targets, ((0, 0), (0, pad)))
+            nc = xp.shape[1] // chunk
+            xcs = xp.reshape(x.shape[0], nc, chunk, -1).swapaxes(0, 1)
+            tcs = tp.reshape(x.shape[0], nc, chunk).swapaxes(0, 1)
+            # checkpoint: backward rematerializes one chunk of logits at a
+            # time — only (B, chunk, V) is ever live
+            ces = jax.lax.map(
+                jax.checkpoint(lambda args: ce_of(*args)), (xcs, tcs))
+            ce = ces.swapaxes(0, 1).reshape(x.shape[0], -1)[:, :s]
+        else:
+            ce = ce_of(x, targets)
+        loss = ce.mean() + 0.01 * aux
+        return loss, {"ce": ce.mean(), "aux": aux}
+
+    # ---- caches -----------------------------------------------------------------
+    def _cache_entry(self, entry: str, lead: Tuple[int, ...], batch: int,
+                     max_len: int, abstract: bool) -> Dict:
+        cfg = self.cfg
+        kind = _mixer_kind(entry)
+        mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract \
+            else (lambda s, d: jnp.zeros(s, d))
+        if kind == "attn":
+            kv, hd = cfg.n_kv_heads, cfg.hd
+            cdt = cfg.cache_dtype or cfg.dtype
+            c = {"k": mk(lead + (batch, max_len, kv, hd), cdt),
+                 "v": mk(lead + (batch, max_len, kv, hd), cdt),
+                 "pos": mk(lead, jnp.int32)}
+            if cdt == jnp.int8:
+                c["k_scale"] = mk(lead + (batch, max_len, kv), jnp.float32)
+                c["v_scale"] = mk(lead + (batch, max_len, kv), jnp.float32)
+        elif kind == "mamba2":
+            di, h, n = SSM.ssm_dims(cfg)
+            c = {"ssm": mk(lead + (batch, h, cfg.ssm_head_dim, n),
+                           jnp.float32),
+                 "conv": mk(lead + (batch, cfg.conv_width - 1, di + 2 * n),
+                            jnp.float32)}
+        else:
+            r = cfg.rnn_width or cfg.d_model
+            c = {"h": mk(lead + (batch, r), jnp.float32),
+                 "conv": mk(lead + (batch, cfg.conv_width - 1, r),
+                            jnp.float32)}
+        if cfg.encoder_layers > 0:
+            kv, hd = cfg.n_kv_heads, cfg.hd
+            c["_cross"] = {
+                "k": mk(lead + (batch, cfg.encoder_seq, kv, hd), cfg.dtype),
+                "v": mk(lead + (batch, cfg.encoder_seq, kv, hd), cfg.dtype)}
+        return c
+
+    def make_cache(self, batch: int, max_len: int,
+                   abstract: bool = False) -> Dict:
+        cache: Dict[str, Any] = {}
+        for gi, entry in enumerate(self.pat):
+            if self.groups > 0:
+                cache[f"blk{gi}"] = self._cache_entry(
+                    entry, (self.groups,), batch, max_len, abstract)
+        for j in range(self.remainder):
+            cache[f"rem{j}"] = self._cache_entry(
+                self.pat[j], (), batch, max_len, abstract)
+        if self.cfg.learned_pos:
+            mk = (lambda: jax.ShapeDtypeStruct((), jnp.int32)) if abstract \
+                else (lambda: jnp.zeros((), jnp.int32))
+            cache["pos_offset"] = mk()
+        return cache
+
+    # ---- serving ---------------------------------------------------------------
+    def prefill(self, params: Dict, tokens: jax.Array, max_len: int,
+                rules: Optional[Rules] = None,
+                frames: Optional[jax.Array] = None,
+                patches: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+        cache = self.make_cache(tokens.shape[0], max_len)
+        if frames is not None and self.cfg.encoder_layers > 0:
+            enc_out = self.encode(params, frames, rules)
+            cache = self._fill_cross(params, cache, enc_out)
+            logits, cache, _ = self.forward(params, tokens, rules,
+                                            cache=cache)
+        else:
+            logits, cache, _ = self.forward(params, tokens, rules,
+                                            patches=patches, cache=cache)
+        return logits[:, -1], cache
+
+    def _fill_cross(self, params: Dict, cache: Dict,
+                    enc_out: jax.Array) -> Dict:
+        cfg = self.cfg
+
+        def kv_for(pdefs):
+            k = jnp.einsum("btd,ldhk->lbthk", enc_out, pdefs["wk"])
+            v = jnp.einsum("btd,ldhk->lbthk", enc_out, pdefs["wv"])
+            return k.astype(cfg.dtype), v.astype(cfg.dtype)
+
+        for gi in range(len(self.pat)):
+            key = f"blk{gi}"
+            if key in cache and "_cross" in cache[key]:
+                k, v = kv_for(params[key]["xattn"])
+                cache[key]["_cross"] = {"k": k, "v": v}
+        for j in range(self.remainder):
+            key = f"rem{j}"
+            if key in cache and "_cross" in cache[key]:
+                k = jnp.einsum("btd,dhk->bthk", enc_out,
+                               params[key]["xattn"]["wk"]).astype(cfg.dtype)
+                v = jnp.einsum("btd,dhk->bthk", enc_out,
+                               params[key]["xattn"]["wv"]).astype(cfg.dtype)
+                cache[key]["_cross"] = {"k": k, "v": v}
+        return cache
+
+    def decode_step(self, params: Dict, tokens: jax.Array, cache: Dict,
+                    rules: Optional[Rules] = None
+                    ) -> Tuple[jax.Array, Dict]:
+        """tokens: (B, 1) -> (logits (B, vocab), new cache)."""
+        logits, cache, _ = self.forward(params, tokens, rules, cache=cache)
+        return logits[:, -1], cache

@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS / device-count forcing here — smoke
+tests and benches must see the real (single-CPU) device; only the dry-run
+subprocesses force 512 host devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

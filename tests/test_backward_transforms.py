@@ -1,0 +1,63 @@
+"""Table V identities: the two backward ops are plain convolutions whose
+dimensions follow the published transformation formulas."""
+import pytest
+
+from repro.core.backward import dw_conv, dx_conv, expand_training_graph
+from repro.core.layers import ConvLayer
+from repro.core.networks import resnet50
+
+
+def _f(s=2, kh=7, kw=7, oh=112, ow=112, ih=224, iw=224, ic=3, oc=64, n=32):
+    return ConvLayer(name="f", n=n, ic=ic, ih=ih, iw=iw, oc=oc, oh=oh,
+                     ow=ow, kh=kh, kw=kw, s=s, has_bias=False)
+
+
+def test_dx_formulas():
+    f = _f()
+    b = dx_conv(f)
+    assert b.kh == f.kh and b.kw == f.kw            # K^B = K^F
+    assert b.ic == f.oc and b.oc == f.ic            # channel swap
+    assert b.s == 1
+    assert b.oh == f.ih and b.ow == f.iw            # OH^B = IH^F
+    assert b.ih == f.s * (f.oh - 1) + 1 + 2 * (f.kh - 1)
+    assert b.n == f.n
+
+
+def test_dw_formulas():
+    f = _f()
+    b = dw_conv(f)
+    assert b.kh == f.s * (f.oh - 1) + 1             # huge kernel (223 here)
+    assert b.kh == 223                              # the paper's example
+    assert b.ic == f.n and b.n == f.ic              # batch <-> channel swap
+    assert b.oh == f.kh and b.ow == f.kw            # ofmap = weight shape
+    assert b.ih == f.ih and b.s == 1
+
+
+def test_dx_output_matches_ifmap_volume():
+    """dL/dX must have exactly the ifmap's geometry."""
+    for f in (_f(), _f(s=1, kh=3, kw=3, oh=56, ow=56, ih=56, iw=56,
+                   ic=64, oc=64)):
+        b = dx_conv(f)
+        assert b.ofmap_elems == f.ifmap_elems
+
+
+def test_dw_output_matches_weight_volume():
+    f = _f(s=1, kh=3, kw=3, oh=56, ow=56, ih=56, iw=56, ic=64, oc=256)
+    b = dw_conv(f)
+    assert b.ofmap_elems == f.weight_elems
+
+
+def test_training_graph_contents():
+    net = resnet50(32)
+    full = expand_training_graph(net)
+    names = [l.name for l in full]
+    ops = [getattr(l, "op", "conv") for l in full]
+    assert len(full) > len(net) * 2
+    assert any(n.endswith(".dX") for n in names)
+    assert any(n.endswith(".dW") for n in names)
+    assert "bn_back" in ops
+    assert "relu_back" in ops
+    assert any(o.startswith("update_") for o in ops)
+    # first conv has no dX
+    assert not any(n == "stem.conv.dX" for n in names)
+    assert any(n == "stem.conv.dW" for n in names)

@@ -1,0 +1,97 @@
+"""Unit tests for the systolic Conv model (paper Secs. IV-C/IV-D)."""
+import pytest
+
+from repro.core import HI3, HT3, HardwareSpec
+from repro.core.conv_model import (conv_dram_bits, conv_multipliers,
+                                   conv_stall_cycles, simulate_conv)
+from repro.core.layers import ConvLayer, fc
+from repro.core.tiling import conv_tile_fits, make_conv_tiling
+
+
+def _layer(**kw):
+    base = dict(name="l", n=1, ic=64, ih=56, iw=56, oc=64, oh=56, ow=56,
+                kh=3, kw=3, s=1, has_bias=False)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def test_tiling_is_valid():
+    for hw in (HI3, HT3):
+        for layer in (_layer(), _layer(ic=3, ih=224, oh=112, kh=7, kw=7, s=2),
+                      fc("fc", 1, 2048, 1000), _layer(n=32),
+                      _layer(kh=223, kw=223, ih=224, iw=224, oh=2, ow=2)):
+            t = make_conv_tiling(hw, layer)
+            assert conv_tile_fits(hw, layer, t), (hw.name, layer.name)
+
+
+def test_weight_dram_maximal_reuse():
+    """Eq. 4: each weight element is loaded exactly once (ceil-padded)."""
+    hw = HI3
+    layer = _layer()
+    t = make_conv_tiling(hw, layer)
+    m = conv_multipliers(layer, t)
+    dram = conv_dram_bits(hw, layer, t, m)
+    padded_weight = (t.T_kh * m.m_kh) * (t.T_kw * m.m_kw) \
+        * (t.T_ic * m.m_ic) * (t.T_oc * m.m_oc)
+    assert dram["weight"] == padded_weight * hw.b_w
+    assert dram["weight"] >= layer.weight_elems * hw.b_w
+
+
+def test_psum_no_spill_when_accumulation_fits():
+    """With m_kh = m_kw = m_ic = 1, Eq. 9 degenerates to one store per
+    ofmap element (no DRAM psum round trips)."""
+    hw = HI3
+    layer = _layer(ic=64, oc=64)
+    t = make_conv_tiling(hw, layer)
+    m = conv_multipliers(layer, t)
+    if m.m_accum == 1:
+        dram = conv_dram_bits(hw, layer, t, m)
+        padded_out = m.m_spatial * m.m_oc * t.psum_tile_elems()
+        assert dram["psum"] == padded_out * hw.b_p
+
+
+def test_case_occurrences_partition_tiles():
+    hw = HT3
+    layer = _layer(n=32, ic=256, oc=512, kh=7, kw=7)
+    t = make_conv_tiling(hw, layer)
+    m = conv_multipliers(layer, t)
+    o5 = m.m_oc
+    o4 = m.m_w_tile - m.m_oc
+    o1 = m.m_oc * (m.m_spatial - 1)
+    o2 = (m.m_outer - m.m_spatial * m.m_oc) - o4
+    assert o1 >= 0 and o2 >= 0 and o4 >= 0 and o5 > 0
+    assert o1 + o2 + o4 + o5 == m.m_outer
+
+
+def test_stall_models_ordering():
+    """no_stall <= simplified <= simdit (total cycles)."""
+    for hw in (HI3, HT3):
+        for layer in (_layer(), _layer(n=32, kh=7, kw=7),
+                      fc("fc", 32, 4096, 4096)):
+            full = simulate_conv(hw, layer).total_cycles
+            simpl = simulate_conv(hw, layer,
+                                  stall_model="simplified").total_cycles
+            nostall = simulate_conv(hw, layer,
+                                    stall_model="no_stall").total_cycles
+            assert nostall <= simpl <= full
+
+
+def test_bandwidth_monotonicity():
+    layer = _layer(n=32)
+    lo = HT3.replace(bw_w=64, bw_i=64, bw_o=64)
+    hi = HT3.replace(bw_w=1024, bw_i=1024, bw_o=1024)
+    assert simulate_conv(hi, layer).total_cycles \
+        <= simulate_conv(lo, layer).total_cycles
+
+
+def test_mac_count_exact():
+    layer = _layer(n=4)
+    st = simulate_conv(HT3, layer)
+    assert st.ops["mac"] == 4 * 56 * 56 * 64 * 3 * 3 * 64
+
+
+def test_compute_cycles_lower_bound():
+    """Compute cycles >= MACs / (J*K) (array can't beat its peak)."""
+    for layer in (_layer(), _layer(ic=3), fc("fc", 1, 512, 1000)):
+        st = simulate_conv(HI3, layer)
+        assert st.compute_cycles >= layer.macs // (HI3.J * HI3.K)

@@ -1,0 +1,100 @@
+"""The scan-aware jaxpr cost walker and the HLO collective parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.costmodel import jaxpr_cost
+from repro.launch.roofline import collective_bytes
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    c = jaxpr_cost(lambda x, y: x @ y, a, b)
+    assert c.flops == 2 * 64 * 48 * 32
+
+
+def test_scan_multiplies_body():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=17)
+        return y
+
+    c = jaxpr_cost(f, x, w)
+    assert c.flops >= 17 * 2 * 64 * 64 * 64
+    assert c.flops < 18 * 2 * 64 * 64 * 64
+
+
+def test_remat_counts_recompute():
+    """The differentiated jaxpr of a checkpointed fn includes the forward
+    recompute — flops(grad w/ remat) > flops(grad w/o remat)."""
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f_plain(x, w):
+        return jnp.sum(jnp.tanh(x @ w) @ w)
+
+    def f_remat(x, w):
+        return jnp.sum(jax.checkpoint(
+            lambda x: jnp.tanh(x @ w) @ w)(x))
+
+    g_plain = jaxpr_cost(jax.grad(f_plain, argnums=1), x, w)
+    g_remat = jaxpr_cost(jax.grad(f_remat, argnums=1), x, w)
+    assert g_remat.flops > g_plain.flops
+
+
+def test_bytes_reasonable_for_matmul():
+    m = n = k = 256
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    c = jaxpr_cost(lambda x, y: x @ y, a, b)
+    io = (m * k + k * n + m * n) * 4
+    assert io <= c.bytes <= 3 * io
+
+
+# ---------------------------------------------------------------------------
+# collective parser
+# ---------------------------------------------------------------------------
+
+HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %ag = f32[64,128]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+  ROOT %t = (s32[], f32[64,128]) tuple(%i, %ag)
+}
+
+%cond.2 (p: (s32[], f32[64,128])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[64,128]) -> f32[] {
+  %w = (s32[], f32[64,128]) while(%init), condition=%cond.2, body=%body.1
+  ROOT %ar = f32[] all-reduce(%s), channel_id=9, replica_groups={}, to_apply=%add
+}
+"""
+
+
+def test_collective_parser_multiplies_trips():
+    total, kinds = collective_bytes(HLO)
+    body_bytes = 64 * 128 * 4
+    assert kinds["all-gather"] == body_bytes * 12
+    assert kinds["all-reduce"] == 4
+    assert total == body_bytes * 12 + 4
+
+
+def test_collective_parser_tuple_output():
+    txt = """
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %ar = (f32[8]{0}, f32[16]{0}) all-reduce-start(%a, %b), channel_id=1
+  %d = (f32[8]{0}, f32[16]{0}) all-reduce-done(%ar)
+}
+"""
+    total, kinds = collective_bytes(txt)
+    assert total == (8 + 16) * 4      # -start counted once, -done skipped

@@ -1,0 +1,44 @@
+"""Data pipeline: determinism, host sharding, checkpointable state."""
+import numpy as np
+
+from repro.data.pipeline import PipelineState, TokenPipeline
+
+
+def test_deterministic():
+    p1 = TokenPipeline(vocab_size=100, seq_len=32, global_batch=4, seed=7)
+    p2 = TokenPipeline(vocab_size=100, seq_len=32, global_batch=4, seed=7)
+    np.testing.assert_array_equal(p1.batch_at(5)["tokens"],
+                                  p2.batch_at(5)["tokens"])
+    assert not np.array_equal(p1.batch_at(5)["tokens"],
+                              p1.batch_at(6)["tokens"])
+
+
+def test_host_shards_differ():
+    a = TokenPipeline(vocab_size=100, seq_len=32, global_batch=8,
+                      host_index=0, host_count=2)
+    b = TokenPipeline(vocab_size=100, seq_len=32, global_batch=8,
+                      host_index=1, host_count=2)
+    assert a.local_batch == b.local_batch == 4
+    assert not np.array_equal(a.batch_at(0)["tokens"],
+                              b.batch_at(0)["tokens"])
+
+
+def test_state_resume_identical_stream():
+    p = TokenPipeline(vocab_size=50, seq_len=16, global_batch=2)
+    it = p.iter_from(PipelineState())
+    seen = []
+    state = PipelineState()
+    for _ in range(4):
+        state, batch = next(it)
+        seen.append(batch["tokens"])
+    it2 = p.iter_from(PipelineState(step=2))
+    _, b2 = next(it2)
+    np.testing.assert_array_equal(seen[2], b2["tokens"])
+
+
+def test_learnable_structure():
+    """The stream is repeat-biased — copy-previous predicts >50%."""
+    p = TokenPipeline(vocab_size=97, seq_len=64, global_batch=4)
+    t = p.batch_at(0)["tokens"]
+    agree = (t[:, :-1] == t[:, 1:]).mean()
+    assert agree > 0.5

@@ -1,0 +1,94 @@
+"""Serving-path equivalence: prefill + token-by-token decode must match
+the full forward pass for every architecture family (attention w/ GQA +
+windows, SSM recurrence, RG-LRU recurrence, MoE routing, enc-dec cross
+attention, VLM patch prefix)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.frontends import synth_frontend_inputs
+from repro.models.transformer import Model
+
+FAMILIES = ["qwen3-0.6b", "gemma3-27b", "stablelm-1.6b", "mamba2-130m",
+            "recurrentgemma-9b", "granite-moe-1b-a400m",
+            "llama4-maverick-400b-a17b", "whisper-tiny", "pixtral-12b"]
+
+B, S, PRE = 2, 24, 16
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_prefill_decode_matches_forward(arch):
+    cfg = reduced(get_config(arch)).replace(
+        dtype=jnp.float32, remat=False,
+        moe_capacity=8.0)   # no-drop capacity: decode == train numerics
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    fr = synth_frontend_inputs(cfg, B)
+    logits, _, _ = model.forward(params, tokens,
+                                 frames=fr.get("frames"),
+                                 patches=fr.get("patches"))
+    if fr.get("patches") is not None:
+        logits = logits[:, fr["patches"].shape[1]:]
+
+    last, cache = model.prefill(params, tokens[:, :PRE], max_len=S + 8,
+                                frames=fr.get("frames"),
+                                patches=fr.get("patches"))
+    errs = [float(jnp.abs(last - logits[:, PRE - 1]).max())]
+    for t in range(PRE, S):
+        lg, cache = model.decode_step(params, tokens[:, t:t + 1], cache)
+        errs.append(float(jnp.abs(lg - logits[:, t]).max()))
+    assert max(errs) < 5e-3, f"{arch}: max err {max(errs)}"
+
+
+def test_chunked_attention_equals_dense():
+    cfg = reduced(get_config("qwen3-0.6b")).replace(dtype=jnp.float32,
+                                                    remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 48), 0,
+                                cfg.vocab_size)
+    dense, _, _ = model.forward(params, tokens)
+    chunked_model = Model(cfg.replace(dense_attn_max_seq=1, attn_block=16))
+    chunked, _, _ = chunked_model.forward(params, tokens)
+    assert float(jnp.abs(dense - chunked).max()) < 2e-4
+
+
+def test_int8_kv_cache_close_to_f32():
+    """Quantized KV serving (hillclimb cell 1) tracks the f32 cache within
+    quantization error."""
+    cfg = reduced(get_config("qwen3-0.6b")).replace(dtype=jnp.float32,
+                                                    remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    last, cache = model.prefill(params, tokens[:, :PRE], max_len=S + 8)
+    m8 = Model(cfg.replace(cache_dtype=jnp.int8))
+    last8, cache8 = m8.prefill(params, tokens[:, :PRE], max_len=S + 8)
+    assert cache8["blk0"]["k"].dtype == jnp.int8
+    # greedy argmax agreement over a few decode steps
+    agree = [int((jnp.argmax(last, -1) == jnp.argmax(last8, -1)).sum())]
+    for t in range(PRE, PRE + 4):
+        lg, cache = model.decode_step(params, tokens[:, t:t + 1], cache)
+        lg8, cache8 = m8.decode_step(params, tokens[:, t:t + 1], cache8)
+        agree.append(int((jnp.argmax(lg, -1) == jnp.argmax(lg8, -1)).sum()))
+    assert sum(agree) >= int(0.8 * B * len(agree))
+
+
+def test_windowed_equals_full_when_window_covers():
+    base = reduced(get_config("smollm-360m")).replace(dtype=jnp.float32,
+                                                      remat=False)
+    model = Model(base)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 16), 0,
+                                base.vocab_size)
+    full, _, _ = model.forward(params, tokens)
+    wide = Model(base.replace(window=64, attn_pattern=("local",)))
+    wfull, _, _ = wide.forward(params, tokens)
+    assert float(jnp.abs(full - wfull).max()) < 1e-5
+    narrow = Model(base.replace(window=4, attn_pattern=("local",)))
+    nout, _, _ = narrow.forward(params, tokens)
+    assert float(jnp.abs(full - nout).max()) > 1e-4   # must differ

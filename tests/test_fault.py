@@ -1,0 +1,30 @@
+"""Watchdog: fires on stalls, stays silent while beats arrive."""
+import time
+
+from repro.distributed.fault import Watchdog
+
+
+def test_fires_on_stall():
+    fired = []
+    wd = Watchdog(timeout_s=0.2, on_stall=lambda idle: fired.append(idle))
+    with wd:
+        time.sleep(0.5)
+    assert fired and fired[0] >= 0.2
+
+
+def test_silent_with_beats():
+    fired = []
+    wd = Watchdog(timeout_s=0.3, on_stall=lambda idle: fired.append(idle))
+    with wd:
+        for _ in range(5):
+            time.sleep(0.1)
+            wd.beat()
+    assert not fired
+
+
+def test_fires_once():
+    fired = []
+    wd = Watchdog(timeout_s=0.1, on_stall=lambda idle: fired.append(idle))
+    with wd:
+        time.sleep(0.45)
+    assert len(fired) == 1

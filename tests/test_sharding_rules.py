@@ -1,0 +1,55 @@
+"""Sharding-rule resolution: divisibility fallback and duplicate-axis
+dropping (the two production behaviors the dry-run exposed)."""
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (PROD_RULES, ParamDef, multipod,
+                                 param_specs, spec)
+
+SIZES = {"_axis_sizes": {"pod": 2, "data": 16, "model": 16}}
+
+
+def rules(**extra):
+    r = dict(PROD_RULES)
+    r.update(SIZES)
+    r.update(extra)
+    return r
+
+
+def test_divisibility_fallback():
+    r = rules()
+    # 5 kv heads cannot split a 16-way axis -> unsharded
+    assert spec(r, "batch", "seq", "kv_heads", shape=(256, 128, 5)) \
+        == P("data", None, None)
+    # 16 kv heads can
+    assert spec(r, "batch", "seq", "kv_heads", shape=(256, 128, 16)) \
+        == P("data", None, "model")
+
+
+def test_duplicate_axis_dropped():
+    r = rules(cache_seq="model")
+    # cache_seq and cache_heads both resolve to 'model': first dim wins
+    s = spec(r, "batch", "cache_seq", "cache_heads", None,
+             shape=(128, 32768, 16, 128))
+    assert s == P("data", "model", None, None)
+
+
+def test_tuple_axis_divisibility():
+    r = multipod(rules())
+    # batch = ('pod','data') needs divisibility by 32
+    assert spec(r, "batch", shape=(256,)) == P(("pod", "data"))
+    assert spec(r, "batch", shape=(24,)) == P(None)
+
+
+def test_param_specs_respect_shape():
+    defs = {"wk": ParamDef((960, 5, 64), ("embed", "kv_heads", None))}
+    specs = param_specs(defs, rules())
+    assert specs["wk"] == P("data", None, None)
+    defs2 = {"wk": ParamDef((1024, 16, 64), ("embed", "kv_heads", None))}
+    assert param_specs(defs2, rules())["wk"] == P("data", "model", None)
+
+
+def test_no_rules_means_replicated():
+    assert spec(None, "batch", "seq") == P()
+    defs = {"w": ParamDef((8, 8), ("embed", "ff"))}
+    assert param_specs(defs, None)["w"] == P()

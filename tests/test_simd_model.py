@@ -1,0 +1,89 @@
+"""Unit tests for the SIMD (non-Conv) model — paper Secs. IV-E, V-C, App. A."""
+import math
+
+from repro.core import HT3
+from repro.core import layers as L
+from repro.core.simd_model import simulate_simd
+from repro.core.tiling import SimdTiling, ceil_div, make_simd_tiling
+
+
+def test_tensor_add_dram_eq20():
+    """Eq. 20: A_D = V_tile * M * (2 b_in + b_out)."""
+    hw = HT3
+    layer = L.tensor_add("add", 56, 56, 4, 256)
+    t = make_simd_tiling(hw, layer)
+    st = simulate_simd(hw, layer, t)
+    m = (ceil_div(56, t.T_h) * ceil_div(56, t.T_w) * ceil_div(4, t.T_n)
+         * ceil_div(256, t.T_c))
+    v_tile = t.T_h * t.T_w * t.T_n * t.T_c
+    assert st.dram_total_bits == v_tile * m * (2 * hw.b_in + hw.b_out)
+    # Sec. IV-E: SRAM access count equals the DRAM expression for Tensor-add
+    assert st.sram_total_bits == v_tile * m * (2 * hw.b_in + hw.b_out)
+
+
+def test_tensor_add_cycles_eq21_22():
+    hw = HT3
+    layer = L.tensor_add("add", 16, 16, 1, hw.K)   # single tile case
+    t = SimdTiling(T_h=16, T_w=16, T_n=1, T_c=hw.K, t_c=hw.K)
+    st = simulate_simd(hw, layer, t)
+    # Eq. 21/22: (Th*Tw*Tn) * ceil(Tc/K) * lambda_add + PSO, one tile
+    assert st.compute_cycles == 16 * 16 * 1 * hw.lam("add") + hw.pso_simd
+
+
+def test_relu_op_count():
+    layer = L.relu("r", 8, 8, 2, 64)
+    st = simulate_simd(HT3, layer)
+    assert st.ops["max"] >= 8 * 8 * 2 * 64
+
+
+def test_bn_back_two_parts_and_xhat_writeback():
+    """Algorithm 1: Part-1 writes Xhat back to DRAM (three 4D streams) and
+    Part-2 reads it again — total 4D DRAM traffic is 6 tensors' worth."""
+    hw = HT3
+    layer = L.bn_back("bnb", 14, 14, 32, 256)
+    st = simulate_simd(hw, layer)
+    elems = layer.elems
+    # >= six 4D tensor movements (X, dY, Xhat out; Xhat, dY in; dX out)
+    assert st.dram_total_bits >= 6 * elems * hw.b_in
+    # ... bounded by the same with ceil-padded tiles (h=w=14 pads to the
+    # tile grid) + negligible 1D traffic
+    assert st.dram_total_bits < 6 * 1.4 * elems * hw.b_in
+
+
+def test_bn_back_op_count_eq35():
+    """Eq. 35: Part-2 op count = (2 V1d + 5 V4d (mh mw mn)) mc."""
+    hw = HT3
+    layer = L.bn_back("bnb", 8, 8, 4, hw.K)
+    t = make_simd_tiling(hw, layer)
+    st = simulate_simd(hw, layer, t)
+    total_ops = sum(st.ops.values())
+    elems = layer.elems
+    # Part-1: 5 ops / 4D elem (+4 per channel); Part-2: 5 ops / 4D elem
+    # (+3 per channel after the scale/shift fold)
+    assert total_ops >= 10 * elems
+
+
+def test_single_buffered_stalls_positive():
+    hw = HT3.replace(bw_v=32)
+    layer = L.tensor_add("add", 56, 56, 8, 256)
+    st = simulate_simd(hw, layer)
+    assert st.stall_cycles > 0
+    hi = simulate_simd(HT3.replace(bw_v=4096), layer)
+    assert hi.stall_cycles < st.stall_cycles
+
+
+def test_pool_and_backward():
+    fwd = L.pool("p", 28, 28, 4, 128, r=3, s=2)
+    bwd = L.pool_back("pb", 28, 28, 4, 128, r=3, s=2, mode="max")
+    sf = simulate_simd(HT3, fwd)
+    sb = simulate_simd(HT3, bwd)
+    assert sf.total_cycles > 0 and sb.total_cycles > 0
+    # backward writes the (larger) input-sized gradient
+    assert sb.dram_total_bits > sf.dram_total_bits / 2
+
+
+def test_param_update_cost_scales_with_numel():
+    small = simulate_simd(HT3, L.param_update("u1", 10_000, 4))
+    big = simulate_simd(HT3, L.param_update("u2", 1_000_000, 4))
+    assert big.total_cycles > small.total_cycles
+    assert big.ops["mul"] >= 1_000_000
