@@ -1,0 +1,50 @@
+"""DSE throughput micro-benchmark: candidates evaluated per second for the
+legacy scalar double loop (``search_reference``) vs the tensorized grid
+engine (``search``), on the Table VIII ResNet-50 setup.
+
+The legacy loop is timed on the smaller budgets only (it is the slow path
+this benchmark exists to track); the tensorized engine is additionally
+timed on the full Table VIII budgets.  Tiling caches are cleared before
+every timed run so neither path inherits the other's warm state.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import INFER_PRESETS
+from repro.core.dse import search, search_reference
+from repro.core.networks import resnet50
+from repro.core.tiling import clear_tiling_caches
+
+from .common import row, timed
+
+COMPARE_BUDGETS = (512, 1024, 2048)  # legacy + tensorized, equivalence-checked
+SCALE_BUDGETS = (4096,)              # tensorized only
+
+
+def run() -> List[str]:
+    hw = INFER_PRESETS[64]
+    net = resnet50(1, bn=False)
+    rows: List[str] = []
+    for budget in COMPARE_BUDGETS:
+        clear_tiling_caches()
+        us_ref, ref = timed(search_reference, hw, net, budget, budget)
+        clear_tiling_caches()
+        us_new, res = timed(search, hw, net, budget, budget)
+        n = res.n_candidates
+        assert ref.best == res.best and ref.worst == res.worst, budget
+        rows.append(row(
+            f"dse_scaling.loop.{budget}", us_ref,
+            f"cands={n};cands_per_s={n / (us_ref / 1e6):.0f}"))
+        rows.append(row(
+            f"dse_scaling.tensor.{budget}", us_new,
+            f"cands={n};cands_per_s={n / (us_new / 1e6):.0f};"
+            f"speedup={us_ref / us_new:.1f}x"))
+    for budget in SCALE_BUDGETS:
+        clear_tiling_caches()
+        us_new, res = timed(search, hw, net, budget, budget)
+        n = res.n_candidates
+        rows.append(row(
+            f"dse_scaling.tensor.{budget}", us_new,
+            f"cands={n};cands_per_s={n / (us_new / 1e6):.0f}"))
+    return rows

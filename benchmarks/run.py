@@ -1,30 +1,38 @@
 """Benchmark entry point: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Run as
-``PYTHONPATH=src python -m benchmarks.run [--only PREFIX]``.
+Prints ``name,us_per_call,derived`` CSV rows by default, or a JSON array
+with ``--json`` (for harnesses that need robust parsing).  Run as
+``PYTHONPATH=src python -m benchmarks.run [--only PREFIX] [--json]``.
+
+Failures never abort the sweep: the offending module's traceback goes to
+stderr, an ERROR row is emitted, and the exit code is non-zero.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import traceback
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run only benchmarks whose module name contains this")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a JSON array instead of CSV rows")
     args = ap.parse_args()
 
-    from . import (fig5_stall_models, fig12_sensitivity, table6_resnet50,
-                   table7_resnet18, table8_dse, table9_dse_networks,
-                   table10_economic)
+    from . import (dse_scaling, fig5_stall_models, fig12_sensitivity,
+                   table6_resnet50, table7_resnet18, table8_dse,
+                   table9_dse_networks, table10_economic)
     from . import roofline_bench
 
     modules = [table6_resnet50, table7_resnet18, fig5_stall_models,
                table8_dse, table9_dse_networks, table10_economic,
-               fig12_sensitivity, roofline_bench]
+               fig12_sensitivity, roofline_bench, dse_scaling]
 
-    print("name,us_per_call,derived")
+    records = []
     failures = 0
     for mod in modules:
         name = mod.__name__.rsplit(".", 1)[-1]
@@ -32,10 +40,21 @@ def main() -> None:
             continue
         try:
             for line in mod.run():
-                print(line)
-        except Exception as exc:  # pragma: no cover
+                rname, us, derived = line.split(",", 2)
+                records.append((rname, float(us), derived))
+        except Exception as exc:
             failures += 1
-            print(f"{name}.ERROR,0.0,{type(exc).__name__}:{exc}")
+            traceback.print_exc(file=sys.stderr)
+            records.append((f"{name}.ERROR", 0.0,
+                            f"{type(exc).__name__}:{exc}"))
+
+    if args.json:
+        print(json.dumps([{"name": n, "us_per_call": us, "derived": d}
+                          for n, us, d in records], indent=2))
+    else:
+        print("name,us_per_call,derived")
+        for n, us, d in records:
+            print(f"{n},{us:.1f},{d}")
     if failures:
         sys.exit(1)
 

@@ -15,8 +15,7 @@ from .common import row, timed
 def run() -> List[str]:
     hw = INFER_PRESETS[64]
     net = resnet50(1, bn=False)
-    us, res = timed(search, hw, net, 2048, 2048, lower_bound=False,
-                    collect=False)
+    us, res = timed(search, hw, net, 2048, 2048, lower_bound=False)
     eco_s = res.economic_min_sram()
     eco_b = res.economic_min_bw()
     best = res.best
@@ -33,6 +32,7 @@ def run() -> List[str]:
             f"penalty={(eco_b.cycles / best.cycles - 1) * 100:.1f}%;"
             f"paper=1792bits/14.6%"),
         row("fig11.landscape", 0.0,
-            f"points_within_15pct={len(res.points)}"),
+            f"points_within_15pct={len(res.points)};"
+            f"cands={res.n_candidates}"),
     ]
     return rows

@@ -28,6 +28,7 @@ def run(network=resnet50, tag: str = "table8.resnet50") -> List[str]:
         rows.append(row(
             f"{tag}.{jk}x{jk}", us,
             f"improvement={res.improvement:.2f}x;paper={PAPER[jk]}x;"
+            f"cands={res.n_candidates};"
             f"opt_sizes={'/'.join(map(str, res.best.sizes_kb))}kB;"
             f"opt_bw={'/'.join(map(str, res.best.bws))}"))
     return rows

@@ -157,6 +157,47 @@ def conv_compute_cycles(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling,
     return (conv_tile_compute_cycles(hw, t) + hw.pso_sa) * m.m_outer
 
 
+@dataclass(frozen=True)
+class ConvSegmentQuantities:
+    """Bandwidth-independent per-tile quantities of the Table IV / Eq. 18
+    tile-segment stall model: per-tile compute cycles, the four valid-case
+    occurrence counts, and the per-stream DRAM bit volumes.  They depend
+    only on the tiling (i.e. buffer *sizes*), so a bandwidth sweep over a
+    fixed size configuration reuses one instance (the property the
+    tensorized DSE in ``core.dse`` exploits)."""
+    c_tile: int                               # compute cycles/tile incl. PSO
+    o1: int; o2: int; o4: int; o5: int        # case occurrence counts
+    w_bits: int                               # weight tile
+    wb_bits: int                              # weight + bias tile
+    i_bits: int                               # ifmap tile
+    ps_bits: int                              # psum store only
+    pls_bits: int                             # psum load + store (2x)
+
+
+def conv_segment_quantities(hw: HardwareSpec, layer: ConvLayer,
+                            t: ConvTiling, m: ConvMultipliers
+                            ) -> ConvSegmentQuantities:
+    """Occurrence counts (Sec. IV-D, Case-4 derivation generalized) and
+    per-stream tile volumes shared by ``conv_stall_cycles`` and the DSE
+    cost tables."""
+    o5 = m.m_oc
+    o4 = m.m_w_tile - m.m_oc                                    # Eq. 17
+    o1 = m.m_oc * (m.m_spatial - 1)
+    o2 = (m.m_outer - m.m_spatial * m.m_oc) - o4
+    assert o1 >= 0 and o2 >= 0 and o4 >= 0
+    assert o1 + o2 + o4 + o5 == m.m_outer
+
+    w_bits = t.weight_tile_elems() * hw.b_w
+    b_bits = t.T_oc * hw.b_b if layer.has_bias else 0
+    p_bits = t.psum_tile_elems() * hw.b_p
+    return ConvSegmentQuantities(
+        c_tile=conv_tile_compute_cycles(hw, t) + hw.pso_sa,
+        o1=o1, o2=o2, o4=o4, o5=o5,
+        w_bits=w_bits, wb_bits=w_bits + b_bits,
+        i_bits=t.ifmap_tile_elems(layer.s) * hw.b_i,
+        ps_bits=p_bits, pls_bits=2 * p_bits)
+
+
 def conv_stall_cycles(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling,
                       m: ConvMultipliers) -> int:
     """Tile-segment DRAM stall model (Table IV; Fig. 6; Eqs. 17-18).
@@ -171,34 +212,21 @@ def conv_stall_cycles(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling,
     compute (Fig. 6(b)); psum load & store share the OBuf interface and are
     serialized (the 2x term of Eq. 18).
     """
-    c_tile = conv_tile_compute_cycles(hw, t) + hw.pso_sa
-    w_bits = t.weight_tile_elems() * hw.b_w
-    i_bits = t.ifmap_tile_elems(layer.s) * hw.b_i
-    p_bits = t.psum_tile_elems() * hw.b_p
-    b_bits = t.T_oc * hw.b_b if layer.has_bias else 0
+    q = conv_segment_quantities(hw, layer, t, m)
+    t_w = ceil_div(q.w_bits, hw.bw_w)
+    t_wb = ceil_div(q.wb_bits, hw.bw_w)
+    t_i = ceil_div(q.i_bits, hw.bw_i)
+    t_ps = ceil_div(q.ps_bits, hw.bw_o)        # store only
+    t_pls = ceil_div(q.pls_bits, hw.bw_o)      # load + store, shared interface
 
-    t_w = ceil_div(w_bits, hw.bw_w)
-    t_wb = ceil_div(w_bits + b_bits, hw.bw_w)
-    t_i = ceil_div(i_bits, hw.bw_i)
-    t_ps = ceil_div(p_bits, hw.bw_o)           # store only
-    t_pls = ceil_div(2 * p_bits, hw.bw_o)      # load + store, shared interface
+    seg1 = max(q.c_tile, t_i, t_ps)
+    seg2 = max(q.c_tile, t_i, t_pls)
+    seg4 = max(q.c_tile, t_w, t_i, t_pls)                       # Eq. 18
+    seg5 = max(q.c_tile, t_wb, t_i, t_ps)
 
-    # Occurrence counts (Sec. IV-D, Case-4 derivation generalized):
-    o_case5 = m.m_oc
-    o_case4 = m.m_w_tile - m.m_oc                               # Eq. 17
-    o_case1 = m.m_oc * (m.m_spatial - 1)
-    o_case2 = (m.m_outer - m.m_spatial * m.m_oc) - o_case4
-    assert o_case1 >= 0 and o_case2 >= 0 and o_case4 >= 0
-    assert o_case1 + o_case2 + o_case4 + o_case5 == m.m_outer
-
-    seg1 = max(c_tile, t_i, t_ps)
-    seg2 = max(c_tile, t_i, t_pls)
-    seg4 = max(c_tile, t_w, t_i, t_pls)                         # Eq. 18
-    seg5 = max(c_tile, t_wb, t_i, t_ps)
-
-    total_time = (o_case1 * seg1 + o_case2 * seg2
-                  + o_case4 * seg4 + o_case5 * seg5)
-    compute = c_tile * m.m_outer
+    total_time = (q.o1 * seg1 + q.o2 * seg2
+                  + q.o4 * seg4 + q.o5 * seg5)
+    compute = q.c_tile * m.m_outer
     return max(0, total_time - compute)
 
 

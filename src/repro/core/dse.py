@@ -1,33 +1,56 @@
-"""Design-space exploration — paper Sec. VII-B.
+"""Design-space exploration — paper Sec. VII-B, tensorized.
 
-Exhaustively searches the 8-parameter space (sizes and DRAM bandwidths of
+Exhaustively evaluates the 8-parameter space (sizes and DRAM bandwidths of
 WBuf, IBuf, OBuf, VMem) under total-SRAM and total-bandwidth budgets, with
-every candidate within +/-15% of the budgets (paper's setup).  The search
-exploits two structural properties of the model:
+every candidate within +/-15% of the budgets (paper's setup).  The grid is
+evaluated as dense array operations, never as a per-candidate Python loop.
 
-  * separability: Conv cost depends only on (wbuf, ibuf, obuf) x
-    (bw_w, bw_i, bw_o); non-Conv cost only on (vmem) x (bw_v);
-  * tiling depends on buffer *sizes* only, so for a fixed size triple the
-    per-tile quantities (compute cycles, per-stream bits, case-occurrence
-    counts) are bandwidth-independent and the bandwidth sweep reduces to a
-    vectorized max over parallel streams (Eq. 18) per valid case.
+Evaluation order of the tensorized engine:
 
-The vectorized tables are exact (tested against ``simulate_conv`` /
-``simulate_simd``), so the search is numerically identical to brute force.
+  1. The candidate tuples are projected onto the model's separable axes:
+     Conv cost depends only on (wbuf, ibuf, obuf) x (bw_w, bw_i, bw_o);
+     non-Conv cost only on (vmem) x (bw_v).  Unique size triples / vmem
+     values and unique bandwidth triples / bw_v values are enumerated once.
+  2. For every unique size triple one ``ConvTable`` is built (tiling
+     depends on buffer *sizes* only, so the per-tile quantities — compute
+     cycles, per-stream bits, Table-IV case-occurrence counts — are
+     bandwidth-independent); its ``cycles_batch`` then evaluates *all*
+     bandwidth triples in one broadcasted ``np.maximum`` reduction over
+     [n_bw_triples x n_layers], yielding a ``[n_size_triples x
+     n_bw_triples]`` conv-cost matrix.  A ``[n_vmem x n_bw_v]`` SIMD-cost
+     matrix is built the same way from ``SimdTable.cycles_batch``.
+  3. The full grid cost is the outer addition of the two matrices routed
+     through the budget-filtered candidate lists with ``np.ix_`` fancy
+     indexing — one ``[n_size_tuples x n_bw_tuples]`` int64 array whose
+     row-major order equals the legacy (size-outer, bandwidth-inner)
+     iteration order.
+  4. best/worst come from flat ``argmin``/``argmax`` (first occurrence ==
+     legacy strict-inequality tie-break); the within-``frac`` frontier
+     comes from a boolean mask.  ``DSEPoint`` objects are materialized
+     only for the frontier, never for the full grid.
+
+Tables are deduplicated across identically-shaped layers (names/phases
+stripped) and — via ``search_many`` — shared across networks, so a Table IX
+style multi-network sweep builds each per-size table once.
+
+The tensorized path is numerically identical to brute force: the retained
+reference implementation ``search_reference`` walks the same grid with
+scalar calls, and the equivalence is asserted bit-for-bit in
+``tests/test_dse_equivalence.py``.
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from functools import lru_cache
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .conv_model import conv_multipliers, conv_tile_compute_cycles
+from .conv_model import conv_multipliers, conv_segment_quantities
 from .hardware import KB, HardwareSpec
 from .layers import ConvLayer, SimdLayer
-from .simd_model import simulate_simd
+from .simd_model import simd_part_tile_bits, simulate_simd
 from .tiling import ceil_div, make_conv_tiling, make_simd_tiling
 
 Layer = Union[ConvLayer, SimdLayer]
@@ -35,13 +58,19 @@ Layer = Union[ConvLayer, SimdLayer]
 SIZES_KB = (32, 64, 128, 256, 512, 1024, 2048)
 BWS = (32, 64, 128, 256, 512, 1024, 2048)
 
+FRONTIER_FRAC = 0.15          # paper's "economic design" band (Table X)
+
 
 # ---------------------------------------------------------------------------
 # Vectorized per-size-triple cost tables
 # ---------------------------------------------------------------------------
 
 class ConvTable:
-    """Bandwidth-independent per-layer quantities for fixed buffer sizes."""
+    """Bandwidth-independent per-layer quantities for fixed buffer sizes.
+
+    Arrays are indexed [layer]; ``cycles_batch`` broadcasts them against a
+    vector of bandwidth triples.
+    """
 
     def __init__(self, hw: HardwareSpec, layers: Sequence[ConvLayer]):
         n = len(layers)
@@ -54,22 +83,20 @@ class ConvTable:
         for x, layer in enumerate(layers):
             t = make_conv_tiling(hw, layer)
             m = conv_multipliers(layer, t)
-            self.c_tile[x] = conv_tile_compute_cycles(hw, t) + hw.pso_sa
-            o5 = m.m_oc
-            o4 = m.m_w_tile - m.m_oc
-            o1 = m.m_oc * (m.m_spatial - 1)
-            o2 = (m.m_outer - m.m_spatial * m.m_oc) - o4
-            self.o1[x], self.o2[x], self.o4[x], self.o5[x] = o1, o2, o4, o5
-            w = t.weight_tile_elems() * hw.b_w
-            b = t.T_oc * hw.b_b if layer.has_bias else 0
-            self.w_bits[x] = w
-            self.wb_bits[x] = w + b
-            self.i_bits[x] = t.ifmap_tile_elems(layer.s) * hw.b_i
-            p = t.psum_tile_elems() * hw.b_p
-            self.ps_bits[x] = p
-            self.pls_bits[x] = 2 * p
+            q = conv_segment_quantities(hw, layer, t, m)
+            self.c_tile[x] = q.c_tile
+            self.o1[x], self.o2[x] = q.o1, q.o2
+            self.o4[x], self.o5[x] = q.o4, q.o5
+            self.w_bits[x], self.wb_bits[x] = q.w_bits, q.wb_bits
+            self.i_bits[x] = q.i_bits
+            self.ps_bits[x], self.pls_bits[x] = q.ps_bits, q.pls_bits
 
-    def cycles(self, bw_w: int, bw_i: int, bw_o: int) -> int:
+    def layer_cycles_batch(self, bw_w, bw_i, bw_o) -> np.ndarray:
+        """Per-layer segment-summed cycles for a *vector* of bandwidth
+        triples: returns float64 [n_bw_triples x n_layers]."""
+        bw_w = np.asarray(bw_w, dtype=float).reshape(-1, 1)
+        bw_i = np.asarray(bw_i, dtype=float).reshape(-1, 1)
+        bw_o = np.asarray(bw_o, dtype=float).reshape(-1, 1)
         t_w = np.ceil(self.w_bits / bw_w)
         t_wb = np.ceil(self.wb_bits / bw_w)
         t_i = np.ceil(self.i_bits / bw_i)
@@ -80,45 +107,65 @@ class ConvTable:
         seg2 = np.maximum(np.maximum(c, t_i), t_pls)
         seg4 = np.maximum(np.maximum(np.maximum(c, t_w), t_i), t_pls)
         seg5 = np.maximum(np.maximum(np.maximum(c, t_wb), t_i), t_ps)
-        total = (self.o1 * seg1 + self.o2 * seg2
-                 + self.o4 * seg4 + self.o5 * seg5)
-        return int(total.sum())
+        return (self.o1 * seg1 + self.o2 * seg2
+                + self.o4 * seg4 + self.o5 * seg5)
+
+    def cycles_batch(self, bw_w, bw_i, bw_o) -> np.ndarray:
+        """Network cycles for a vector of bandwidth triples: int64 [m]."""
+        return self.layer_cycles_batch(bw_w, bw_i, bw_o) \
+            .sum(axis=1).astype(np.int64)
+
+    def cycles(self, bw_w: int, bw_i: int, bw_o: int) -> int:
+        return int(self.cycles_batch([bw_w], [bw_i], [bw_o])[0])
 
 
 class SimdTable:
-    """Bandwidth-independent SIMD quantities for a fixed VMem size."""
+    """Bandwidth-independent SIMD quantities for a fixed VMem size.
+
+    Rows are indexed [layer-part]; ``layer_rows`` records each layer's
+    contiguous row slice so a union table can serve several networks.
+    """
 
     def __init__(self, hw: HardwareSpec, layers: Sequence[SimdLayer]):
         rows_b4, rows_b1, rows_mhwn, rows_mc = [], [], [], []
         self.compute = 0
+        self.layer_compute: List[int] = []
+        self.layer_rows: List[Tuple[int, int]] = []
         for layer in layers:
             t = make_simd_tiling(hw, layer)
             st = simulate_simd(hw, layer, t, stall_model="no_stall")
             self.compute += st.compute_cycles
+            self.layer_compute.append(st.compute_cycles)
             m_h = ceil_div(layer.h, t.T_h); m_w = ceil_div(layer.w, t.T_w)
             m_n = ceil_div(layer.n, t.T_n); m_c = ceil_div(layer.c, t.T_c)
-            v4 = t.T_h * t.T_w * t.T_n * t.T_c
+            start = len(rows_b4)
             for part in layer.parts:
-                b4 = sum(int(np.ceil(v4 * ref.scale))
-                         * (hw.b_in if ref.io == "in" else hw.b_out)
-                         for ref in part.tensors if ref.rank == "4d")
-                b1 = sum(t.T_c * (hw.b_in if ref.io == "in" else hw.b_out)
-                         for ref in part.tensors if ref.rank == "1d")
+                b4, b1 = simd_part_tile_bits(hw, part, t)
                 rows_b4.append(b4); rows_b1.append(b1)
                 rows_mhwn.append(m_h * m_w * m_n); rows_mc.append(m_c)
+            self.layer_rows.append((start, len(rows_b4)))
         self.b4 = np.array(rows_b4, dtype=float)
         self.b1 = np.array(rows_b1, dtype=float)
         self.m_hwn = np.array(rows_mhwn, dtype=float)
         self.m_c = np.array(rows_mc, dtype=float)
 
+    def row_stall_batch(self, bw_v) -> np.ndarray:
+        """Per-row stall cycles for a vector of bw_v: float64 [m x n_rows]."""
+        bw = np.asarray(bw_v, dtype=float).reshape(-1, 1)
+        return (np.ceil(self.b4 / bw) * self.m_hwn
+                + np.where(self.b1 > 0, np.ceil(self.b1 / bw), 0.0)) * self.m_c
+
+    def cycles_batch(self, bw_v) -> np.ndarray:
+        """Network cycles for a vector of bw_v values: int64 [m]."""
+        return (self.compute
+                + self.row_stall_batch(bw_v).sum(axis=1)).astype(np.int64)
+
     def cycles(self, bw_v: int) -> int:
-        stall = (np.ceil(self.b4 / bw_v) * self.m_hwn
-                 + np.where(self.b1 > 0, np.ceil(self.b1 / bw_v), 0.0)) * self.m_c
-        return int(self.compute + stall.sum())
+        return int(self.cycles_batch([bw_v])[0])
 
 
 # ---------------------------------------------------------------------------
-# Search
+# Result types
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
@@ -136,8 +183,255 @@ class DSEPoint:
         return sum(self.bws)
 
 
+@dataclass(eq=False)          # ndarray field: compare grids by identity
+class DSEGrid:
+    """The evaluated grid: an int64 cost matrix over the budget-filtered
+    candidate tuples, size tuples along rows (legacy outer loop) and
+    bandwidth tuples along columns (legacy inner loop)."""
+    costs: np.ndarray                        # [n_size_tuples x n_bw_tuples]
+    size_tuples: List[Tuple[int, int, int, int]]
+    bw_tuples: List[Tuple[int, int, int, int]]
+
+    @property
+    def n_candidates(self) -> int:
+        return int(self.costs.size)
+
+    def point(self, flat_index: int) -> DSEPoint:
+        n_bw = len(self.bw_tuples)
+        return DSEPoint(self.size_tuples[flat_index // n_bw],
+                        self.bw_tuples[flat_index % n_bw],
+                        int(self.costs.flat[flat_index]))
+
+    def points_below(self, limit: float) -> List[DSEPoint]:
+        """Materialize DSEPoints with cycles <= limit, in grid order."""
+        idx = np.nonzero(self.costs.ravel() <= limit)[0]
+        return [self.point(int(i)) for i in idx]
+
+
 @dataclass
 class DSEResult:
+    best: DSEPoint
+    worst: DSEPoint
+    grid: Optional[DSEGrid] = field(default=None, repr=False, compare=False)
+    _frontier: Optional[List[DSEPoint]] = field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def improvement(self) -> float:
+        return self.worst.cycles / self.best.cycles
+
+    @property
+    def n_candidates(self) -> int:
+        return self.grid.n_candidates if self.grid is not None else 0
+
+    @property
+    def points(self) -> List[DSEPoint]:
+        """The within-15%-of-optimal frontier (paper Table X / Fig. 11).
+        Only these points are ever materialized as objects; the full grid
+        stays an array in ``grid.costs``."""
+        if self._frontier is None:
+            self._frontier = self.within(FRONTIER_FRAC)
+        return self._frontier
+
+    def within(self, frac: float) -> List[DSEPoint]:
+        if self.grid is None:
+            raise ValueError("result has no retained grid")
+        return self.grid.points_below(self.best.cycles * (1 + frac))
+
+    def economic_min_sram(self, frac: float = FRONTIER_FRAC) -> DSEPoint:
+        return min(self.within(frac), key=lambda p: (p.total_size_kb, p.cycles))
+
+    def economic_min_bw(self, frac: float = FRONTIER_FRAC) -> DSEPoint:
+        return min(self.within(frac),
+                   key=lambda p: (p.total_bw, p.total_size_kb, p.cycles))
+
+
+# ---------------------------------------------------------------------------
+# Grid construction
+# ---------------------------------------------------------------------------
+
+def _tuples(values: Sequence[int], n: int, lo: float, hi: float
+            ) -> List[Tuple[int, ...]]:
+    return [t for t in itertools.product(values, repeat=n)
+            if lo <= sum(t) <= hi]
+
+
+def _project(tuples: Sequence[tuple], sel) -> Tuple[list, np.ndarray]:
+    """Unique projections of the candidate tuples (first-seen order) and
+    the per-candidate index into that unique list."""
+    uniq: Dict[object, int] = {}
+    idx = np.empty(len(tuples), dtype=np.intp)
+    out: list = []
+    for i, t in enumerate(tuples):
+        key = sel(t)
+        j = uniq.get(key)
+        if j is None:
+            j = uniq[key] = len(out)
+            out.append(key)
+        idx[i] = j
+    return out, idx
+
+
+def _norm_conv(layer: ConvLayer) -> ConvLayer:
+    """Strip fields the cost model never reads, so identically-shaped
+    layers share one table column."""
+    return replace(layer, name="", phase="fwd", kind="conv")
+
+
+def _norm_simd(layer: SimdLayer) -> SimdLayer:
+    return replace(layer, name="", phase="fwd", pool_r=0, pool_s=0)
+
+
+class _GridEngine:
+    """Shared batched cost tables for one or more networks.
+
+    Builds each per-size-triple ``ConvTable`` / per-vmem ``SimdTable`` once
+    over the *union* of unique layer shapes across all networks; per-network
+    costs are column gathers over the union arrays (same value sequence as a
+    dedicated per-network table, hence bit-identical sums).
+    """
+
+    def __init__(self, hw_base: HardwareSpec,
+                 nets: Mapping[str, Sequence[Layer]]):
+        self.hw = hw_base
+        self._conv_union: List[ConvLayer] = []
+        self._simd_union: List[SimdLayer] = []
+        conv_index: Dict[ConvLayer, int] = {}
+        simd_index: Dict[SimdLayer, int] = {}
+        self.conv_cols: Dict[str, List[int]] = {}
+        self.simd_ids: Dict[str, List[int]] = {}
+        for name, net in nets.items():
+            ccols: List[int] = []
+            sids: List[int] = []
+            for layer in net:
+                if isinstance(layer, ConvLayer):
+                    k = _norm_conv(layer)
+                    j = conv_index.get(k)
+                    if j is None:
+                        j = conv_index[k] = len(self._conv_union)
+                        self._conv_union.append(k)
+                    ccols.append(j)
+                else:
+                    k = _norm_simd(layer)
+                    j = simd_index.get(k)
+                    if j is None:
+                        j = simd_index[k] = len(self._simd_union)
+                        self._simd_union.append(k)
+                    sids.append(j)
+            self.conv_cols[name] = ccols
+            self.simd_ids[name] = sids
+
+    def conv_matrices(self, s3s: Sequence[Tuple[int, int, int]],
+                      b3s: Sequence[Tuple[int, int, int]]
+                      ) -> Dict[str, np.ndarray]:
+        """Per-network [n_size_triples x n_bw_triples] conv-cost matrices."""
+        bw_w = np.array([b[0] for b in b3s], dtype=float)
+        bw_i = np.array([b[1] for b in b3s], dtype=float)
+        bw_o = np.array([b[2] for b in b3s], dtype=float)
+        mats = {name: np.zeros((len(s3s), len(b3s)), dtype=np.int64)
+                for name in self.conv_cols}
+        for si, (wb, ib, ob) in enumerate(s3s):
+            hw = self.hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
+            table = ConvTable(hw, self._conv_union)
+            per_layer = table.layer_cycles_batch(bw_w, bw_i, bw_o)
+            for name, cols in self.conv_cols.items():
+                if cols:
+                    mats[name][si] = per_layer[:, cols].sum(axis=1) \
+                        .astype(np.int64)
+        return mats
+
+    def simd_matrices(self, vmems: Sequence[int], bw_vs: Sequence[int]
+                      ) -> Dict[str, np.ndarray]:
+        """Per-network [n_vmem x n_bw_v] SIMD-cost matrices."""
+        bw_v = np.array(bw_vs, dtype=float)
+        mats = {name: np.zeros((len(vmems), len(bw_vs)), dtype=np.int64)
+                for name in self.simd_ids}
+        for vi, vm in enumerate(vmems):
+            table = SimdTable(self.hw.replace(vmem=vm * KB), self._simd_union)
+            row_stall = table.row_stall_batch(bw_v)
+            for name, ids in self.simd_ids.items():
+                if not ids:
+                    continue
+                rows = [r for i in ids
+                        for r in range(*table.layer_rows[i])]
+                compute = sum(table.layer_compute[i] for i in ids)
+                mats[name][vi] = (compute
+                                  + row_stall[:, rows].sum(axis=1)) \
+                    .astype(np.int64)
+        return mats
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+def search_many(hw_base: HardwareSpec, nets: Mapping[str, Sequence[Layer]],
+                size_budget_kb: int, bw_budget: int,
+                sizes: Sequence[int] = SIZES_KB, bws: Sequence[int] = BWS,
+                tol: float = 0.15, lower_bound: bool = True
+                ) -> Dict[str, DSEResult]:
+    """Tensorized exhaustive DSE over several networks at once, sharing the
+    per-size cost tables (Table IX style sweeps build every table once).
+
+    ``lower_bound=False`` drops the lower budget bound (used for the
+    Fig. 11 / Table X economic-design landscape, where points far below
+    budget are of interest).
+    """
+    lo_s = size_budget_kb * (1 - tol) if lower_bound else 0
+    lo_b = bw_budget * (1 - tol) if lower_bound else 0
+    size_tuples = _tuples(sizes, 4, lo_s, size_budget_kb * (1 + tol))
+    bw_tuples = _tuples(bws, 4, lo_b, bw_budget * (1 + tol))
+    if not size_tuples or not bw_tuples:
+        raise ValueError("empty DSE space; widen grids or budgets")
+
+    s3s, s3_of = _project(size_tuples, lambda t: t[:3])
+    vs, v_of = _project(size_tuples, lambda t: t[3])
+    b3s, b3_of = _project(bw_tuples, lambda t: t[:3])
+    ws, w_of = _project(bw_tuples, lambda t: t[3])
+
+    eng = _GridEngine(hw_base, nets)
+    conv_mats = eng.conv_matrices(s3s, b3s)
+    simd_mats = eng.simd_matrices(vs, ws)
+
+    out: Dict[str, DSEResult] = {}
+    for name in nets:
+        costs = (conv_mats[name][np.ix_(s3_of, b3_of)]
+                 + simd_mats[name][np.ix_(v_of, w_of)])
+        grid = DSEGrid(costs, size_tuples, bw_tuples)
+        flat = costs.ravel()
+        # argmin/argmax return the first occurrence, matching the legacy
+        # strict-inequality update order (size-outer, bandwidth-inner).
+        best = grid.point(int(flat.argmin()))
+        worst = grid.point(int(flat.argmax()))
+        out[name] = DSEResult(best=best, worst=worst, grid=grid)
+    return out
+
+
+def search(hw_base: HardwareSpec, net: Sequence[Layer],
+           size_budget_kb: int, bw_budget: int,
+           sizes: Sequence[int] = SIZES_KB, bws: Sequence[int] = BWS,
+           tol: float = 0.15, lower_bound: bool = True,
+           collect: bool = True) -> DSEResult:
+    """Tensorized exhaustive DSE for a single network.
+
+    ``collect`` is retained for API compatibility and ignored: the full
+    grid is kept as an array (``result.grid``), ``result.points`` always
+    materializes only the within-15% frontier.
+    """
+    del collect
+    return search_many(hw_base, {"net": net}, size_budget_kb, bw_budget,
+                       sizes=sizes, bws=bws, tol=tol,
+                       lower_bound=lower_bound)["net"]
+
+
+# ---------------------------------------------------------------------------
+# Brute-force reference (the pre-tensorization scalar loop, retained for
+# equivalence testing and the dse_scaling micro-benchmark)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ReferenceResult:
+    """Legacy result shape: every evaluated point materialized."""
     best: DSEPoint
     worst: DSEPoint
     points: List[DSEPoint] = field(default_factory=list)
@@ -150,22 +444,18 @@ class DSEResult:
         lim = self.best.cycles * (1 + frac)
         return [p for p in self.points if p.cycles <= lim]
 
-    def economic_min_sram(self, frac: float = 0.15) -> DSEPoint:
+    def economic_min_sram(self, frac: float = FRONTIER_FRAC) -> DSEPoint:
         return min(self.within(frac), key=lambda p: (p.total_size_kb, p.cycles))
 
-    def economic_min_bw(self, frac: float = 0.15) -> DSEPoint:
+    def economic_min_bw(self, frac: float = FRONTIER_FRAC) -> DSEPoint:
         return min(self.within(frac),
                    key=lambda p: (p.total_bw, p.total_size_kb, p.cycles))
 
 
-def _tuples(values: Sequence[int], n: int, lo: float, hi: float
-            ) -> List[Tuple[int, ...]]:
-    return [t for t in itertools.product(values, repeat=n)
-            if lo <= sum(t) <= hi]
-
-
 class _Engine:
-    def __init__(self, hw_base: HardwareSpec, net: List[Layer]):
+    """Scalar per-candidate evaluator (legacy path)."""
+
+    def __init__(self, hw_base: HardwareSpec, net: Sequence[Layer]):
         self.hw = hw_base
         self.conv_layers = tuple(l for l in net if isinstance(l, ConvLayer))
         self.simd_layers = tuple(l for l in net if isinstance(l, SimdLayer))
@@ -194,15 +484,16 @@ class _Engine:
                 + self.simd_cycles(sz[3], bw[3]))
 
 
-def search(hw_base: HardwareSpec, net: List[Layer],
-           size_budget_kb: int, bw_budget: int,
-           sizes: Sequence[int] = SIZES_KB, bws: Sequence[int] = BWS,
-           tol: float = 0.15, lower_bound: bool = True,
-           collect: bool = True) -> DSEResult:
-    """Exhaustive DSE. ``lower_bound=False`` drops the lower budget bound
-    (used for the Fig. 11 / Table X economic-design landscape, where points
-    far below budget are of interest); with ``collect=False`` only the
-    best/worst and the within-15% frontier points are retained (streaming)."""
+def search_reference(hw_base: HardwareSpec, net: Sequence[Layer],
+                     size_budget_kb: int, bw_budget: int,
+                     sizes: Sequence[int] = SIZES_KB,
+                     bws: Sequence[int] = BWS,
+                     tol: float = 0.15, lower_bound: bool = True,
+                     collect: bool = True) -> ReferenceResult:
+    """The pre-tensorization brute force: a Python double loop with one
+    scalar ``cycles()`` call and one ``DSEPoint`` per candidate.  With
+    ``collect=False`` only the best/worst and the within-15% frontier are
+    retained (second streaming pass)."""
     eng = _Engine(hw_base, net)
     lo_s = size_budget_kb * (1 - tol) if lower_bound else 0
     lo_b = bw_budget * (1 - tol) if lower_bound else 0
@@ -225,21 +516,25 @@ def search(hw_base: HardwareSpec, net: List[Layer],
                 points.append(DSEPoint(sz, bw, cyc))
 
     if not collect:
-        # second streaming pass: keep only the 15%-of-optimal frontier
-        lim = best.cycles * 1.15
+        lim = best.cycles * (1 + FRONTIER_FRAC)
         for sz in size_tuples:
             for bw in bw_tuples:
                 cyc = eng.cycles(sz, bw)
                 if cyc <= lim:
                     points.append(DSEPoint(sz, bw, cyc))
-    return DSEResult(best=best, worst=worst, points=points)
+    return ReferenceResult(best=best, worst=worst, points=points)
 
 
-def sensitivity(hw_opt: HardwareSpec, net: List[Layer],
+# ---------------------------------------------------------------------------
+# Sensitivity (Fig. 12)
+# ---------------------------------------------------------------------------
+
+def sensitivity(hw_opt: HardwareSpec, net: Sequence[Layer],
                 sizes: Sequence[int] = SIZES_KB,
                 bws: Sequence[int] = BWS) -> Dict[str, Dict[int, float]]:
     """Fig. 12: vary one parameter at a time around the optimal point;
-    report cycles normalized to the optimal."""
+    report cycles normalized to the optimal.  (Tilings are memoized keyed
+    on sizes only, so the bandwidth sweeps re-derive nothing.)"""
     from .conv_model import simulate_conv
 
     def cost(hw: HardwareSpec) -> int:

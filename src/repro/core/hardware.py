@@ -53,7 +53,9 @@ class HardwareSpec:
     # ALU issue cycles per arithmetic op type. The SIMD array is pipelined
     # (Sec. IV-E: "pipeline stages ... similar to a general MIPS processor"),
     # so simple ops sustain 1/cycle; iterative ops (div, sqrt) cost more.
-    lat: Dict[str, int] = field(default_factory=lambda: dict(
+    # hash=False keeps the frozen spec hashable (dicts aren't); two specs
+    # differing only in ``lat`` hash-collide but still compare unequal.
+    lat: Dict[str, int] = field(hash=False, default_factory=lambda: dict(
         add=1, sub=1, mul=1, div=2, max=1, cmp=1, exp=2, sqrt=2, rsqrt=2, copy=1))
 
     # ---- derived helpers -------------------------------------------------

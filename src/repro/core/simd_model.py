@@ -22,6 +22,23 @@ from .layers import SimdLayer, SimdPart
 from .tiling import SimdTiling, ceil_div, make_simd_tiling
 
 
+def simd_part_tile_bits(hw: HardwareSpec, part: SimdPart,
+                        t: SimdTiling) -> tuple[int, int]:
+    """Per-tile DRAM traffic of one part: (bits per 4D (h,w,n,c) tile,
+    bits per 1D per-c-tile load/store).  Bandwidth-independent — shared by
+    the per-layer stall model and the DSE cost tables."""
+    v4 = t.T_h * t.T_w * t.T_n * t.T_c
+    bits_4d_per_tile = 0
+    for ref in part.tensors:
+        if ref.rank == "4d":
+            vol = int(math.ceil(v4 * ref.scale))
+            bits_4d_per_tile += vol * (hw.b_in if ref.io == "in" else hw.b_out)
+    bits_1d_per_ctile = sum(
+        t.T_c * (hw.b_in if ref.io == "in" else hw.b_out)
+        for ref in part.tensors if ref.rank == "1d")
+    return bits_4d_per_tile, bits_1d_per_ctile
+
+
 def _part_stats(hw: HardwareSpec, layer: SimdLayer, part: SimdPart,
                 t: SimdTiling) -> PerfStats:
     m_h = ceil_div(layer.h, t.T_h)
@@ -34,14 +51,7 @@ def _part_stats(hw: HardwareSpec, layer: SimdLayer, part: SimdPart,
     v1 = t.T_c
 
     # ---- DRAM ------------------------------------------------------------
-    bits_4d_per_tile = 0
-    for ref in part.tensors:
-        if ref.rank == "4d":
-            vol = int(math.ceil(v4 * ref.scale))
-            bits_4d_per_tile += vol * (hw.b_in if ref.io == "in" else hw.b_out)
-    bits_1d_per_ctile = sum(
-        v1 * (hw.b_in if ref.io == "in" else hw.b_out)
-        for ref in part.tensors if ref.rank == "1d")
+    bits_4d_per_tile, bits_1d_per_ctile = simd_part_tile_bits(hw, part, t)
     dram_bits = (bits_4d_per_tile * m_hwn + bits_1d_per_ctile) * m_c
 
     # ---- op counts ---------------------------------------------------------

@@ -34,54 +34,97 @@ class LayerReport:
 
 
 @dataclass
+class _Aggregates:
+    """One-pass rollup of a layer list: per-engine cycle/traffic sums so the
+    NetworkReport properties stop re-scanning every layer on each access."""
+    total_cycles: int = 0
+    stall_cycles: int = 0
+    compute_by_engine: Dict[str, int] = field(default_factory=dict)
+    cycles_by_engine: Dict[str, int] = field(default_factory=dict)
+    dram_by_engine: Dict[str, int] = field(default_factory=dict)
+    sram_by_engine: Dict[str, int] = field(default_factory=dict)
+    dram_total: int = 0
+    sram_total: int = 0
+    sram_by_buffer: Dict[str, int] = field(default_factory=dict)
+    ops: Dict[str, int] = field(default_factory=dict)
+
+    @classmethod
+    def scan(cls, layers: List["LayerReport"]) -> "_Aggregates":
+        ag = cls()
+        for r in layers:
+            s = r.stats
+            tc = s.total_cycles
+            dram = s.dram_total_bits
+            sram = s.sram_total_bits
+            ag.total_cycles += tc
+            ag.stall_cycles += s.stall_cycles
+            e = r.engine
+            ag.compute_by_engine[e] = \
+                ag.compute_by_engine.get(e, 0) + s.compute_cycles
+            ag.cycles_by_engine[e] = ag.cycles_by_engine.get(e, 0) + tc
+            ag.dram_by_engine[e] = ag.dram_by_engine.get(e, 0) + dram
+            ag.sram_by_engine[e] = ag.sram_by_engine.get(e, 0) + sram
+            ag.dram_total += dram
+            ag.sram_total += sram
+            for k, v in s.sram_bits.items():
+                ag.sram_by_buffer[k] = ag.sram_by_buffer.get(k, 0) + v
+            for k, v in s.ops.items():
+                ag.ops[k] = ag.ops.get(k, 0) + v
+        return ag
+
+
+@dataclass
 class NetworkReport:
     layers: List[LayerReport] = field(default_factory=list)
+    _agg: Optional[_Aggregates] = field(default=None, repr=False, compare=False)
+    _agg_len: int = field(default=-1, repr=False, compare=False)
 
     # ---- aggregates --------------------------------------------------------
-    def _sum(self, pred, attr) -> int:
-        return sum(attr(r.stats) for r in self.layers if pred(r))
+    def _aggregates(self) -> _Aggregates:
+        """Cached one-pass rollup; recomputed when layers are appended or
+        removed (keyed on the list length — replacing a layer in place
+        without changing the count is not supported)."""
+        if self._agg is None or self._agg_len != len(self.layers):
+            self._agg = _Aggregates.scan(self.layers)
+            self._agg_len = len(self.layers)
+        return self._agg
 
     @property
     def total_cycles(self) -> int:
-        return self._sum(lambda r: True, lambda s: s.total_cycles)
+        return self._aggregates().total_cycles
 
     @property
     def compute_cycles_sa(self) -> int:
-        return self._sum(lambda r: r.engine == "sa", lambda s: s.compute_cycles)
+        return self._aggregates().compute_by_engine.get("sa", 0)
 
     @property
     def compute_cycles_simd(self) -> int:
-        return self._sum(lambda r: r.engine == "simd", lambda s: s.compute_cycles)
+        return self._aggregates().compute_by_engine.get("simd", 0)
 
     @property
     def stall_cycles(self) -> int:
-        return self._sum(lambda r: True, lambda s: s.stall_cycles)
+        return self._aggregates().stall_cycles
 
     def cycles(self, engine: Optional[str] = None) -> int:
-        return self._sum(lambda r: engine is None or r.engine == engine,
-                         lambda s: s.total_cycles)
+        ag = self._aggregates()
+        return ag.total_cycles if engine is None \
+            else ag.cycles_by_engine.get(engine, 0)
 
     def dram_bits(self, engine: Optional[str] = None) -> int:
-        return self._sum(lambda r: engine is None or r.engine == engine,
-                         lambda s: s.dram_total_bits)
+        ag = self._aggregates()
+        return ag.dram_total if engine is None \
+            else ag.dram_by_engine.get(engine, 0)
 
     def sram_bits(self, engine: Optional[str] = None) -> int:
-        return self._sum(lambda r: engine is None or r.engine == engine,
-                         lambda s: s.sram_total_bits)
+        ag = self._aggregates()
+        return ag.sram_total if engine is None \
+            else ag.sram_by_engine.get(engine, 0)
 
     def sram_bits_by_buffer(self) -> Dict[str, int]:
-        out: Dict[str, int] = {}
-        for r in self.layers:
-            for k, v in r.stats.sram_bits.items():
-                out[k] = out.get(k, 0) + v
-        return out
+        return dict(self._aggregates().sram_by_buffer)
 
     def ops(self) -> Dict[str, int]:
-        out: Dict[str, int] = {}
-        for r in self.layers:
-            for k, v in r.stats.ops.items():
-                out[k] = out.get(k, 0) + v
-        return out
+        return dict(self._aggregates().ops)
 
     def nonconv_fraction(self, metric: str = "cycles") -> float:
         """Fraction of the metric attributable to non-Conv (SIMD) layers."""

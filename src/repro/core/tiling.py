@@ -30,6 +30,45 @@ def ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+# ---------------------------------------------------------------------------
+# Tiling caches
+#
+# Tilings depend on a small subset of the HardwareSpec (buffer sizes, bit
+# widths, array dims) and on the layer *shape* — never on layer names,
+# phases, or DRAM bandwidths.  Keying the cache on exactly that subset means
+# e.g. a bandwidth-only sensitivity sweep, or a DSE bandwidth sweep at fixed
+# buffer sizes, hits the cache on every call, and identically-shaped layers
+# with different names share one entry.
+# ---------------------------------------------------------------------------
+
+_CONV_TILING_CACHE: Dict[tuple, "ConvTiling"] = {}
+_SIMD_TILING_CACHE: Dict[tuple, "SimdTiling"] = {}
+
+
+def clear_tiling_caches() -> None:
+    """Drop all memoized tilings (used by benchmarks for fair timing)."""
+    _CONV_TILING_CACHE.clear()
+    _SIMD_TILING_CACHE.clear()
+
+
+def _conv_hw_key(hw: HardwareSpec) -> tuple:
+    return (hw.wbuf, hw.ibuf, hw.obuf, hw.bbuf,
+            hw.b_w, hw.b_b, hw.b_i, hw.b_p, hw.J, hw.K)
+
+
+def _conv_layer_key(layer: ConvLayer) -> tuple:
+    return (layer.n, layer.ic, layer.ih, layer.iw, layer.oc, layer.oh,
+            layer.ow, layer.kh, layer.kw, layer.s, layer.has_bias)
+
+
+def _simd_hw_key(hw: HardwareSpec) -> tuple:
+    return (hw.vmem, hw.b_in, hw.K)
+
+
+def _simd_layer_key(layer: SimdLayer) -> tuple:
+    return (layer.h, layer.w, layer.n, layer.c, layer.parts)
+
+
 def _align_down(v: int, a: int) -> int:
     return max(a, (v // a) * a) if v >= a else v
 
@@ -81,6 +120,15 @@ def conv_tile_fits(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling) -> bool:
 
 
 def make_conv_tiling(hw: HardwareSpec, layer: ConvLayer) -> ConvTiling:
+    """Memoized front-end to the greedy tiling derivation below."""
+    key = (_conv_hw_key(hw), _conv_layer_key(layer))
+    t = _CONV_TILING_CACHE.get(key)
+    if t is None:
+        t = _CONV_TILING_CACHE[key] = _derive_conv_tiling(hw, layer)
+    return t
+
+
+def _derive_conv_tiling(hw: HardwareSpec, layer: ConvLayer) -> ConvTiling:
     wcap = hw.wbuf // 2 * 8 // hw.b_w          # weight elems per half-buffer
     icap = hw.ibuf // 2 * 8 // hw.b_i
     ocap = hw.obuf // 2 * 8 // hw.b_p
@@ -170,6 +218,15 @@ def simd_tile_fits(hw: HardwareSpec, layer: SimdLayer, t: "SimdTiling") -> bool:
 
 
 def make_simd_tiling(hw: HardwareSpec, layer: SimdLayer) -> SimdTiling:
+    """Memoized front-end to the greedy tiling derivation below."""
+    key = (_simd_hw_key(hw), _simd_layer_key(layer))
+    t = _SIMD_TILING_CACHE.get(key)
+    if t is None:
+        t = _SIMD_TILING_CACHE[key] = _derive_simd_tiling(hw, layer)
+    return t
+
+
+def _derive_simd_tiling(hw: HardwareSpec, layer: SimdLayer) -> SimdTiling:
     T_c = min(layer.c, max(hw.K, _align_down(layer.c, hw.K)))
     t = SimdTiling(1, 1, 1, T_c, t_c=min(hw.K, T_c))
     while not simd_tile_fits(hw, layer, t) and t.T_c > 1:

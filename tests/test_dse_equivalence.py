@@ -1,0 +1,156 @@
+"""Equivalence of the tensorized DSE against the retained brute-force
+reference, plus the supporting caches (tilings, NetworkReport aggregates).
+
+The tensorized ``search()`` must be *bit-identical* to the scalar double
+loop: same best/worst points, same within-frac frontier (contents and
+order), same economic picks."""
+import numpy as np
+import pytest
+
+from repro.core import INFER_PRESETS
+from repro.core.dse import (BWS, SIZES_KB, ConvTable, SimdTable, search,
+                            search_many, search_reference)
+from repro.core.layers import ConvLayer, SimdLayer, fc, pool, relu, tensor_add
+from repro.core.simulator import simulate_network
+from repro.core.tiling import make_conv_tiling, make_simd_tiling
+
+HW = INFER_PRESETS[16]
+GRID_SIZES = (32, 64, 128, 256)
+GRID_BWS = (32, 64, 128, 256)
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def tiny_net():
+    """A few conv + non-conv layers, with a repeated shape under a
+    different name to exercise the shape-dedup path."""
+    return [
+        _conv("c1"),
+        relu("r1", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32, has_bias=False),
+        _conv("c2_dup", ic=32, oc=32, has_bias=False),   # same shape as c2
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        tensor_add("a1", 8, 8, 1, 32),
+        fc("fc", 1, 2048, 100),
+    ]
+
+
+def tiny_net2():
+    return [
+        _conv("d1", ic=8, oc=16, kh=5, kw=5),
+        relu("r1", 16, 16, 1, 16),
+        fc("fc", 1, 512, 10),
+    ]
+
+
+def _assert_equivalent(res, ref):
+    assert res.best == ref.best
+    assert res.worst == ref.worst
+    assert res.improvement == ref.improvement
+    for frac in (0.05, 0.15, 0.5):
+        assert res.within(frac) == ref.within(frac)
+    assert res.economic_min_sram() == ref.economic_min_sram()
+    assert res.economic_min_bw() == ref.economic_min_bw()
+
+
+@pytest.mark.parametrize("lower_bound", [True, False])
+def test_search_matches_bruteforce(lower_bound):
+    net = tiny_net()
+    ref = search_reference(HW, net, 256, 256, sizes=GRID_SIZES, bws=GRID_BWS,
+                           tol=0.5, lower_bound=lower_bound)
+    res = search(HW, net, 256, 256, sizes=GRID_SIZES, bws=GRID_BWS,
+                 tol=0.5, lower_bound=lower_bound)
+    _assert_equivalent(res, ref)
+    # the frontier, not the full grid, is what gets materialized
+    assert len(res.points) < res.n_candidates
+    assert res.points == res.within(0.15)
+
+
+def test_search_many_matches_individual_searches():
+    nets = {"a": tiny_net(), "b": tiny_net2()}
+    many = search_many(HW, nets, 256, 256, sizes=GRID_SIZES, bws=GRID_BWS,
+                       tol=0.5)
+    for name, net in nets.items():
+        single = search(HW, net, 256, 256, sizes=GRID_SIZES, bws=GRID_BWS,
+                        tol=0.5)
+        assert many[name].best == single.best
+        assert many[name].worst == single.worst
+        ref = search_reference(HW, net, 256, 256, sizes=GRID_SIZES,
+                               bws=GRID_BWS, tol=0.5)
+        _assert_equivalent(many[name], ref)
+
+
+def test_conv_table_batch_matches_scalar():
+    layers = [l for l in tiny_net() if isinstance(l, ConvLayer)]
+    table = ConvTable(HW, layers)
+    bws = [(32, 64, 128), (256, 32, 64), (128, 128, 128)]
+    batch = table.cycles_batch([b[0] for b in bws], [b[1] for b in bws],
+                               [b[2] for b in bws])
+    for k, (w, i, o) in enumerate(bws):
+        assert int(batch[k]) == table.cycles(w, i, o)
+
+
+def test_simd_table_batch_matches_scalar():
+    layers = [l for l in tiny_net() if isinstance(l, SimdLayer)]
+    table = SimdTable(HW, layers)
+    batch = table.cycles_batch([32, 128, 256])
+    for k, bw in enumerate((32, 128, 256)):
+        assert int(batch[k]) == table.cycles(bw)
+
+
+def test_grid_cost_matrix_matches_pointwise_engine():
+    """Every entry of the tensorized cost grid equals a scalar evaluation."""
+    from repro.core.dse import _Engine
+    net = tiny_net()
+    res = search(HW, net, 256, 256, sizes=GRID_SIZES, bws=GRID_BWS, tol=0.5)
+    eng = _Engine(HW, net)
+    rng = np.random.default_rng(0)
+    n_sz = len(res.grid.size_tuples)
+    n_bw = len(res.grid.bw_tuples)
+    for si, bi in zip(rng.integers(0, n_sz, 25), rng.integers(0, n_bw, 25)):
+        sz = res.grid.size_tuples[si]
+        bw = res.grid.bw_tuples[bi]
+        assert int(res.grid.costs[si, bi]) == eng.cycles(sz, bw)
+
+
+def test_tiling_cache_ignores_bandwidth_and_names():
+    layer = _conv("x1")
+    t1 = make_conv_tiling(HW, layer)
+    # bandwidth-only change: cache hit, same object
+    assert make_conv_tiling(HW.replace(bw_w=64, bw_i=64, bw_o=64), layer) is t1
+    # same shape, different name/phase: same entry
+    assert make_conv_tiling(HW, _conv("x2", phase="bwd_dx")) is t1
+
+    sl = relu("s1", 16, 16, 1, 32)
+    s1 = make_simd_tiling(HW, sl)
+    assert make_simd_tiling(HW.replace(bw_v=64), sl) is s1
+    assert make_simd_tiling(HW, relu("s2", 16, 16, 1, 32)) is s1
+
+
+def test_network_report_aggregates_cached_and_invalidated():
+    net = tiny_net()
+    rep = simulate_network(HW, net)
+    manual_total = sum(r.stats.total_cycles for r in rep.layers)
+    assert rep.total_cycles == manual_total
+    assert rep.cycles("sa") + rep.cycles("simd") == rep.total_cycles
+    assert rep.dram_bits("sa") + rep.dram_bits("simd") == rep.dram_bits()
+    # appending a layer invalidates the cached aggregates
+    extra = simulate_network(HW, [_conv("extra")]).layers[0]
+    rep.layers.append(extra)
+    assert rep.total_cycles == manual_total + extra.stats.total_cycles
+    assert rep.ops()["mac"] == sum(r.stats.ops.get("mac", 0)
+                                   for r in rep.layers)
+
+
+def test_full_default_grid_small_budget():
+    """End-to-end on the real SIZES_KB/BWS grids at the smallest Table VIII
+    budget, against brute force."""
+    net = tiny_net()
+    ref = search_reference(HW, net, 512, 512, sizes=SIZES_KB, bws=BWS)
+    res = search(HW, net, 512, 512, sizes=SIZES_KB, bws=BWS)
+    _assert_equivalent(res, ref)
