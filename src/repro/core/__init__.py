@@ -3,14 +3,14 @@ reimplemented (Secs. III-VI), plus the TPU-adapted instantiation used by the
 framework's roofline/DSE machinery (``tpu_model``)."""
 from .hardware import (HI1, HI2, HI3, HT1, HT2, HT3, INFER_PRESETS,
                        TRAIN_PRESETS, HardwareSpec)
-from .layers import ConvLayer, SimdLayer, fc
+from .layers import ConvLayer, SimdLayer, fc, phase_key
 from .simulator import NetworkReport, simulate, simulate_network
 from .backward import dx_conv, dw_conv, expand_training_graph
 
 __all__ = [
     "HardwareSpec", "HT1", "HT2", "HT3", "HI1", "HI2", "HI3",
     "TRAIN_PRESETS", "INFER_PRESETS",
-    "ConvLayer", "SimdLayer", "fc",
+    "ConvLayer", "SimdLayer", "fc", "phase_key",
     "NetworkReport", "simulate", "simulate_network",
     "dx_conv", "dw_conv", "expand_training_graph",
 ]

@@ -19,6 +19,8 @@ from .layers import ConvLayer, SimdLayer
 
 Layer = Union[ConvLayer, SimdLayer]
 
+__all__ = ["dx_conv", "dw_conv", "expand_training_graph"]
+
 
 def dx_conv(f: ConvLayer) -> ConvLayer:
     """Conv computing dL/dX^l (Table V, top half).
@@ -67,11 +69,15 @@ def expand_training_graph(net: List[Layer]) -> List[Layer]:
       GAP     : gap_back broadcast.
     """
     out: List[Layer] = list(net)
-    first_conv = next((l for l in net if isinstance(l, ConvLayer)), None)
+    # Positional, not identity-based: frozen layer dataclasses may be reused
+    # (shape-identical blocks), so "the input layer" is the first conv *slot*.
+    first_conv_pos = next((i for i, l in enumerate(net)
+                           if isinstance(l, ConvLayer)), None)
 
-    for layer in reversed(net):
+    for pos in range(len(net) - 1, -1, -1):
+        layer = net[pos]
         if isinstance(layer, ConvLayer):
-            if layer is not first_conv:
+            if pos != first_conv_pos:
                 out.append(dx_conv(layer))
             out.append(dw_conv(layer))
             if layer.has_bias:

@@ -31,7 +31,20 @@ Evaluation order of the tensorized engine:
 
 Tables are deduplicated across identically-shaped layers (names/phases
 stripped) and — via ``search_many`` — shared across networks, so a Table IX
-style multi-network sweep builds each per-size table once.
+style multi-network sweep builds each per-size table once.  On top of
+that, ``get_conv_table``/``get_simd_table`` keep a *process-lifetime*
+cache keyed on (hw invariants, size triple, layer-shape+phase tuple), so
+repeated ``search`` calls — a sweep over budgets whose size-tuple windows
+overlap, or a training sweep after an inference sweep — rebuild nothing
+(``table_cache_stats`` exposes the hit counters).
+
+Training workloads (``training=True`` on ``search``/``search_many``) are
+expanded once through ``expand_training_graph`` (Table I) and evaluated on
+the same grid engine; the per-network *per-phase* matrices built alongside
+the totals make the cost of any candidate phase-resolvable —
+``DSEResult.phase_breakdown`` splits any grid point's cycles into
+conv fwd / dX / dW and SIMD fwd / bwd (exactly partitioning the total),
+and ``phase_profile`` does the same for a single fixed configuration.
 
 The tensorized path is numerically identical to brute force: the retained
 reference implementation ``search_reference`` walks the same grid with
@@ -47,11 +60,14 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .backward import expand_training_graph
 from .conv_model import conv_multipliers, conv_segment_quantities
 from .hardware import KB, HardwareSpec
 from .layers import ConvLayer, SimdLayer
 from .simd_model import simd_part_tile_bits, simulate_simd
-from .tiling import ceil_div, make_conv_tiling, make_simd_tiling
+from .tiling import (_conv_hw_key, _conv_layer_key, _simd_hw_key,
+                     _simd_layer_key, ceil_div, make_conv_tiling,
+                     make_simd_tiling)
 
 Layer = Union[ConvLayer, SimdLayer]
 
@@ -74,6 +90,7 @@ class ConvTable:
 
     def __init__(self, hw: HardwareSpec, layers: Sequence[ConvLayer]):
         n = len(layers)
+        self.phases: Tuple[str, ...] = tuple(l.phase for l in layers)
         self.c_tile = np.zeros(n)          # compute cycles / tile (incl. PSO)
         self.o1 = np.zeros(n); self.o2 = np.zeros(n)
         self.o4 = np.zeros(n); self.o5 = np.zeros(n)
@@ -115,6 +132,18 @@ class ConvTable:
         return self.layer_cycles_batch(bw_w, bw_i, bw_o) \
             .sum(axis=1).astype(np.int64)
 
+    def phase_cycles_batch(self, bw_w, bw_i, bw_o) -> Dict[str, np.ndarray]:
+        """Per-phase cycles (reduced over the phase's layer columns) for a
+        vector of bandwidth triples: {phase: int64 [m]}.  The phase sums
+        partition the layer set, so they add up exactly to
+        ``cycles_batch`` (all quantities are integers in float64)."""
+        per_layer = self.layer_cycles_batch(bw_w, bw_i, bw_o)
+        out: Dict[str, np.ndarray] = {}
+        for ph in dict.fromkeys(self.phases):
+            cols = [x for x, p in enumerate(self.phases) if p == ph]
+            out[ph] = per_layer[:, cols].sum(axis=1).astype(np.int64)
+        return out
+
     def cycles(self, bw_w: int, bw_i: int, bw_o: int) -> int:
         return int(self.cycles_batch([bw_w], [bw_i], [bw_o])[0])
 
@@ -129,6 +158,7 @@ class SimdTable:
     def __init__(self, hw: HardwareSpec, layers: Sequence[SimdLayer]):
         rows_b4, rows_b1, rows_mhwn, rows_mc = [], [], [], []
         self.compute = 0
+        self.phases: Tuple[str, ...] = tuple(l.phase for l in layers)
         self.layer_compute: List[int] = []
         self.layer_rows: List[Tuple[int, int]] = []
         for layer in layers:
@@ -160,8 +190,82 @@ class SimdTable:
         return (self.compute
                 + self.row_stall_batch(bw_v).sum(axis=1)).astype(np.int64)
 
+    def phase_cycles_batch(self, bw_v) -> Dict[str, np.ndarray]:
+        """Per-phase cycles for a vector of bw_v values: {phase: int64 [m]}.
+        Partitions ``cycles_batch`` exactly, like the ConvTable variant."""
+        row_stall = self.row_stall_batch(bw_v)
+        out: Dict[str, np.ndarray] = {}
+        for ph in dict.fromkeys(self.phases):
+            ids = [x for x, p in enumerate(self.phases) if p == ph]
+            rows = [r for i in ids for r in range(*self.layer_rows[i])]
+            compute = sum(self.layer_compute[i] for i in ids)
+            out[ph] = (compute + row_stall[:, rows].sum(axis=1)) \
+                .astype(np.int64)
+        return out
+
     def cycles(self, bw_v: int) -> int:
         return int(self.cycles_batch([bw_v])[0])
+
+
+# ---------------------------------------------------------------------------
+# Process-lifetime table cache
+#
+# A ConvTable depends only on the conv-relevant hardware invariants
+# (buffer sizes, bit widths, array dims — exactly ``_conv_hw_key``) and the
+# layer *shapes*; a SimdTable on (vmem, b_in, K) — the tiling key — plus
+# b_out and the ALU latency table, which its tile bits / compute bake in.
+# Caching them across ``search`` calls means a Table VIII style sweep over
+# *budgets* rebuilds nothing for the size triples the budget windows share,
+# and a training sweep reuses every table an earlier inference sweep of the
+# same shapes built.  Phases ride along in the key so a cached table's
+# ``phases`` vector always matches its caller's layer list.
+# ---------------------------------------------------------------------------
+
+_CONV_TABLE_CACHE: Dict[tuple, ConvTable] = {}
+_SIMD_TABLE_CACHE: Dict[tuple, SimdTable] = {}
+_TABLE_CACHE_STATS = {"conv_hits": 0, "conv_misses": 0,
+                      "simd_hits": 0, "simd_misses": 0}
+
+
+def get_conv_table(hw: HardwareSpec, layers: Sequence[ConvLayer]) -> ConvTable:
+    """Shared, process-lifetime ConvTable constructor."""
+    key = (_conv_hw_key(hw),
+           tuple((_conv_layer_key(l), l.phase) for l in layers))
+    t = _CONV_TABLE_CACHE.get(key)
+    if t is None:
+        _TABLE_CACHE_STATS["conv_misses"] += 1
+        t = _CONV_TABLE_CACHE[key] = ConvTable(hw, layers)
+    else:
+        _TABLE_CACHE_STATS["conv_hits"] += 1
+    return t
+
+
+def get_simd_table(hw: HardwareSpec, layers: Sequence[SimdLayer]) -> SimdTable:
+    """Shared, process-lifetime SimdTable constructor."""
+    key = (_simd_hw_key(hw), hw.b_out, tuple(sorted(hw.lat.items())),
+           tuple((_simd_layer_key(l), l.phase) for l in layers))
+    t = _SIMD_TABLE_CACHE.get(key)
+    if t is None:
+        _TABLE_CACHE_STATS["simd_misses"] += 1
+        t = _SIMD_TABLE_CACHE[key] = SimdTable(hw, layers)
+    else:
+        _TABLE_CACHE_STATS["simd_hits"] += 1
+    return t
+
+
+def table_cache_stats() -> Dict[str, int]:
+    """Hit/miss counters plus current entry counts of the shared caches."""
+    return dict(_TABLE_CACHE_STATS,
+                conv_entries=len(_CONV_TABLE_CACHE),
+                simd_entries=len(_SIMD_TABLE_CACHE))
+
+
+def clear_table_caches() -> None:
+    """Drop all cached tables and zero the counters (benchmark fairness)."""
+    _CONV_TABLE_CACHE.clear()
+    _SIMD_TABLE_CACHE.clear()
+    for k in _TABLE_CACHE_STATS:
+        _TABLE_CACHE_STATS[k] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +285,55 @@ class DSEPoint:
     @property
     def total_bw(self) -> int:
         return sum(self.bws)
+
+
+@dataclass(frozen=True)
+class PhaseBreakdown:
+    """Phase-resolved cycle attribution of one design point.
+
+    ``cycles`` maps namespaced phase keys ('conv:fwd', 'conv:bwd_dx',
+    'conv:bwd_dw', 'simd:fwd', 'simd:bwd') to cycle counts; the keys
+    partition the layer set, so the values sum exactly to the point's
+    total cycles.  Derived shares give the paper's Table VI style
+    conv-vs-non-conv and fwd-vs-bwd splits for *any* grid candidate."""
+    cycles: Tuple[Tuple[str, int], ...]
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, int]) -> "PhaseBreakdown":
+        return cls(tuple(sorted(d.items())))
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.cycles)
+
+    @property
+    def total(self) -> int:
+        return sum(v for _, v in self.cycles)
+
+    @property
+    def conv_cycles(self) -> int:
+        return sum(v for k, v in self.cycles if k.startswith("conv:"))
+
+    @property
+    def nonconv_cycles(self) -> int:
+        return sum(v for k, v in self.cycles if k.startswith("simd:"))
+
+    @property
+    def fwd_cycles(self) -> int:
+        return sum(v for k, v in self.cycles if k.endswith(":fwd"))
+
+    @property
+    def bwd_cycles(self) -> int:
+        return self.total - self.fwd_cycles
+
+    @property
+    def nonconv_share(self) -> float:
+        t = self.total
+        return self.nonconv_cycles / t if t else 0.0
+
+    @property
+    def bwd_share(self) -> float:
+        t = self.total
+        return self.bwd_cycles / t if t else 0.0
 
 
 @dataclass(eq=False)          # ndarray field: compare grids by identity
@@ -207,12 +360,47 @@ class DSEGrid:
         idx = np.nonzero(self.costs.ravel() <= limit)[0]
         return [self.point(int(i)) for i in idx]
 
+    def locate(self, point: DSEPoint) -> Tuple[int, int]:
+        """(size-row, bandwidth-column) indices of a point's tuples."""
+        if not hasattr(self, "_size_index"):
+            self._size_index = {t: i for i, t in enumerate(self.size_tuples)}
+            self._bw_index = {t: i for i, t in enumerate(self.bw_tuples)}
+        try:
+            return self._size_index[point.sizes_kb], self._bw_index[point.bws]
+        except KeyError:
+            raise ValueError(f"point {point} is not on this grid") from None
+
+
+@dataclass(eq=False)
+class _PhaseGrids:
+    """Per-phase cost matrices over the same separable axes as the total
+    grid: conv matrices are [n_size_triples x n_bw_triples], simd matrices
+    [n_vmem x n_bw_v]; the ``*_of`` projections route any candidate's grid
+    coordinates into them.  Together they phase-resolve every candidate of
+    the search space without materializing per-phase full grids."""
+    conv: Dict[str, np.ndarray]          # 'conv:<phase>' -> matrix
+    simd: Dict[str, np.ndarray]          # 'simd:<phase>' -> matrix
+    s3_of: np.ndarray
+    b3_of: np.ndarray
+    v_of: np.ndarray
+    w_of: np.ndarray
+
+    def breakdown_at(self, si: int, bi: int) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for ph, m in self.conv.items():
+            out[ph] = int(m[self.s3_of[si], self.b3_of[bi]])
+        for ph, m in self.simd.items():
+            out[ph] = int(m[self.v_of[si], self.w_of[bi]])
+        return out
+
 
 @dataclass
 class DSEResult:
     best: DSEPoint
     worst: DSEPoint
     grid: Optional[DSEGrid] = field(default=None, repr=False, compare=False)
+    phase_grids: Optional[_PhaseGrids] = field(
+        default=None, repr=False, compare=False)
     _frontier: Optional[List[DSEPoint]] = field(
         default=None, repr=False, compare=False)
 
@@ -244,6 +432,17 @@ class DSEResult:
     def economic_min_bw(self, frac: float = FRONTIER_FRAC) -> DSEPoint:
         return min(self.within(frac),
                    key=lambda p: (p.total_bw, p.total_size_kb, p.cycles))
+
+    def phase_breakdown(self, point: Optional[DSEPoint] = None
+                        ) -> PhaseBreakdown:
+        """Phase-resolved cycle attribution for any candidate on the grid
+        (default: the best point).  The returned cycles partition the
+        point's total exactly."""
+        if self.grid is None or self.phase_grids is None:
+            raise ValueError("result has no retained phase grids")
+        point = point if point is not None else self.best
+        si, bi = self.grid.locate(point)
+        return PhaseBreakdown.from_dict(self.phase_grids.breakdown_at(si, bi))
 
 
 # ---------------------------------------------------------------------------
@@ -300,9 +499,16 @@ class _GridEngine:
         simd_index: Dict[SimdLayer, int] = {}
         self.conv_cols: Dict[str, List[int]] = {}
         self.simd_ids: Dict[str, List[int]] = {}
+        # Per-network per-phase column/id lists.  Dedup is by *shape* (phase
+        # stripped), so a fwd conv and a shape-identical dX conv share one
+        # table column but are attributed to their own phases here.
+        self.conv_phase_cols: Dict[str, Dict[str, List[int]]] = {}
+        self.simd_phase_ids: Dict[str, Dict[str, List[int]]] = {}
         for name, net in nets.items():
             ccols: List[int] = []
             sids: List[int] = []
+            pcols: Dict[str, List[int]] = {}
+            pids: Dict[str, List[int]] = {}
             for layer in net:
                 if isinstance(layer, ConvLayer):
                     k = _norm_conv(layer)
@@ -311,6 +517,7 @@ class _GridEngine:
                         j = conv_index[k] = len(self._conv_union)
                         self._conv_union.append(k)
                     ccols.append(j)
+                    pcols.setdefault(f"conv:{layer.phase}", []).append(j)
                 else:
                     k = _norm_simd(layer)
                     j = simd_index.get(k)
@@ -318,47 +525,81 @@ class _GridEngine:
                         j = simd_index[k] = len(self._simd_union)
                         self._simd_union.append(k)
                     sids.append(j)
+                    pids.setdefault(f"simd:{layer.phase}", []).append(j)
             self.conv_cols[name] = ccols
             self.simd_ids[name] = sids
+            self.conv_phase_cols[name] = pcols
+            self.simd_phase_ids[name] = pids
 
     def conv_matrices(self, s3s: Sequence[Tuple[int, int, int]],
                       b3s: Sequence[Tuple[int, int, int]]
-                      ) -> Dict[str, np.ndarray]:
-        """Per-network [n_size_triples x n_bw_triples] conv-cost matrices."""
+                      ) -> Tuple[Dict[str, np.ndarray],
+                                 Dict[str, Dict[str, np.ndarray]]]:
+        """Per-network [n_size_triples x n_bw_triples] conv-cost matrices:
+        (totals, per-phase).  Totals are computed over the full column list
+        exactly as before the phase split (same summation order, hence
+        bit-identical to the scalar reference); phase matrices partition
+        them."""
         bw_w = np.array([b[0] for b in b3s], dtype=float)
         bw_i = np.array([b[1] for b in b3s], dtype=float)
         bw_o = np.array([b[2] for b in b3s], dtype=float)
         mats = {name: np.zeros((len(s3s), len(b3s)), dtype=np.int64)
                 for name in self.conv_cols}
+        # Single-phase networks (all inference sweeps): the one phase's
+        # column list IS the total's, so alias the totals matrix instead of
+        # re-reducing every row.
+        pmats = {name: {ph: np.zeros((len(s3s), len(b3s)), dtype=np.int64)
+                        for ph in phases} if len(phases) > 1
+                 else {ph: mats[name] for ph in phases}
+                 for name, phases in self.conv_phase_cols.items()}
         for si, (wb, ib, ob) in enumerate(s3s):
             hw = self.hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
-            table = ConvTable(hw, self._conv_union)
+            table = get_conv_table(hw, self._conv_union)
             per_layer = table.layer_cycles_batch(bw_w, bw_i, bw_o)
             for name, cols in self.conv_cols.items():
                 if cols:
                     mats[name][si] = per_layer[:, cols].sum(axis=1) \
                         .astype(np.int64)
-        return mats
+                pcs = self.conv_phase_cols[name]
+                if len(pcs) > 1:
+                    for ph, pc in pcs.items():
+                        pmats[name][ph][si] = per_layer[:, pc].sum(axis=1) \
+                            .astype(np.int64)
+        return mats, pmats
 
     def simd_matrices(self, vmems: Sequence[int], bw_vs: Sequence[int]
-                      ) -> Dict[str, np.ndarray]:
-        """Per-network [n_vmem x n_bw_v] SIMD-cost matrices."""
+                      ) -> Tuple[Dict[str, np.ndarray],
+                                 Dict[str, Dict[str, np.ndarray]]]:
+        """Per-network [n_vmem x n_bw_v] SIMD-cost matrices:
+        (totals, per-phase)."""
         bw_v = np.array(bw_vs, dtype=float)
         mats = {name: np.zeros((len(vmems), len(bw_vs)), dtype=np.int64)
                 for name in self.simd_ids}
+        # Same single-phase aliasing as conv_matrices.
+        pmats = {name: {ph: np.zeros((len(vmems), len(bw_vs)), dtype=np.int64)
+                        for ph in phases} if len(phases) > 1
+                 else {ph: mats[name] for ph in phases}
+                 for name, phases in self.simd_phase_ids.items()}
         for vi, vm in enumerate(vmems):
-            table = SimdTable(self.hw.replace(vmem=vm * KB), self._simd_union)
+            table = get_simd_table(self.hw.replace(vmem=vm * KB),
+                                   self._simd_union)
             row_stall = table.row_stall_batch(bw_v)
-            for name, ids in self.simd_ids.items():
-                if not ids:
-                    continue
+
+            def net_cycles(ids: List[int]) -> np.ndarray:
                 rows = [r for i in ids
                         for r in range(*table.layer_rows[i])]
                 compute = sum(table.layer_compute[i] for i in ids)
-                mats[name][vi] = (compute
-                                  + row_stall[:, rows].sum(axis=1)) \
+                return (compute + row_stall[:, rows].sum(axis=1)) \
                     .astype(np.int64)
-        return mats
+
+            for name, ids in self.simd_ids.items():
+                if ids:
+                    mats[name][vi] = net_cycles(ids)
+                pis = self.simd_phase_ids[name]
+                if len(pis) > 1:
+                    for ph, pi in pis.items():
+                        pmats[name][ph][vi] = net_cycles(pi)
+        return mats, pmats
 
 
 # ---------------------------------------------------------------------------
@@ -368,15 +609,25 @@ class _GridEngine:
 def search_many(hw_base: HardwareSpec, nets: Mapping[str, Sequence[Layer]],
                 size_budget_kb: int, bw_budget: int,
                 sizes: Sequence[int] = SIZES_KB, bws: Sequence[int] = BWS,
-                tol: float = 0.15, lower_bound: bool = True
-                ) -> Dict[str, DSEResult]:
+                tol: float = 0.15, lower_bound: bool = True,
+                training: bool = False) -> Dict[str, DSEResult]:
     """Tensorized exhaustive DSE over several networks at once, sharing the
     per-size cost tables (Table IX style sweeps build every table once).
+
+    ``training=True`` expands each network through the Table I training
+    graph (forward + backward + updates) once up front; the expanded
+    layers then flow through the same shape-dedup (a dX conv that is
+    shape-identical to a forward conv shares its table column) and the
+    per-phase matrices attribute every candidate's cost to
+    conv fwd/dX/dW and SIMD fwd/bwd.
 
     ``lower_bound=False`` drops the lower budget bound (used for the
     Fig. 11 / Table X economic-design landscape, where points far below
     budget are of interest).
     """
+    if training:
+        nets = {name: expand_training_graph(list(net))
+                for name, net in nets.items()}
     lo_s = size_budget_kb * (1 - tol) if lower_bound else 0
     lo_b = bw_budget * (1 - tol) if lower_bound else 0
     size_tuples = _tuples(sizes, 4, lo_s, size_budget_kb * (1 + tol))
@@ -390,8 +641,8 @@ def search_many(hw_base: HardwareSpec, nets: Mapping[str, Sequence[Layer]],
     ws, w_of = _project(bw_tuples, lambda t: t[3])
 
     eng = _GridEngine(hw_base, nets)
-    conv_mats = eng.conv_matrices(s3s, b3s)
-    simd_mats = eng.simd_matrices(vs, ws)
+    conv_mats, conv_pmats = eng.conv_matrices(s3s, b3s)
+    simd_mats, simd_pmats = eng.simd_matrices(vs, ws)
 
     out: Dict[str, DSEResult] = {}
     for name in nets:
@@ -403,7 +654,10 @@ def search_many(hw_base: HardwareSpec, nets: Mapping[str, Sequence[Layer]],
         # strict-inequality update order (size-outer, bandwidth-inner).
         best = grid.point(int(flat.argmin()))
         worst = grid.point(int(flat.argmax()))
-        out[name] = DSEResult(best=best, worst=worst, grid=grid)
+        phases = _PhaseGrids(conv=conv_pmats[name], simd=simd_pmats[name],
+                             s3_of=s3_of, b3_of=b3_of, v_of=v_of, w_of=w_of)
+        out[name] = DSEResult(best=best, worst=worst, grid=grid,
+                              phase_grids=phases)
     return out
 
 
@@ -411,7 +665,7 @@ def search(hw_base: HardwareSpec, net: Sequence[Layer],
            size_budget_kb: int, bw_budget: int,
            sizes: Sequence[int] = SIZES_KB, bws: Sequence[int] = BWS,
            tol: float = 0.15, lower_bound: bool = True,
-           collect: bool = True) -> DSEResult:
+           training: bool = False, collect: bool = True) -> DSEResult:
     """Tensorized exhaustive DSE for a single network.
 
     ``collect`` is retained for API compatibility and ignored: the full
@@ -421,7 +675,51 @@ def search(hw_base: HardwareSpec, net: Sequence[Layer],
     del collect
     return search_many(hw_base, {"net": net}, size_budget_kb, bw_budget,
                        sizes=sizes, bws=bws, tol=tol,
-                       lower_bound=lower_bound)["net"]
+                       lower_bound=lower_bound, training=training)["net"]
+
+
+def phase_profile(hw: HardwareSpec, net: Sequence[Layer],
+                  training: bool = False) -> PhaseBreakdown:
+    """Phase-resolved cycles of one fixed configuration, evaluated through
+    the batched cost tables (cycle-identical to the scalar simulator's
+    'simdit' stall model, and sharing the process-lifetime table cache
+    with any DSE sweep of the same shapes)."""
+    if training:
+        net = expand_training_graph(list(net))
+    convs = [l for l in net if isinstance(l, ConvLayer)]
+    simds = [l for l in net if isinstance(l, SimdLayer)]
+    cycles: Dict[str, int] = {}
+    if convs:
+        per_phase = get_conv_table(hw, convs).phase_cycles_batch(
+            [hw.bw_w], [hw.bw_i], [hw.bw_o])
+        cycles.update({f"conv:{ph}": int(v[0])
+                       for ph, v in per_phase.items()})
+    if simds:
+        per_phase = get_simd_table(hw, simds).phase_cycles_batch([hw.bw_v])
+        cycles.update({f"simd:{ph}": int(v[0])
+                       for ph, v in per_phase.items()})
+    return PhaseBreakdown.from_dict(cycles)
+
+
+def frontier_shift(inference: DSEResult, training: DSEResult
+                   ) -> Dict[str, float]:
+    """How the optimal allocation moves when the workload switches from
+    inference to training (the paper's qualitative Sec. VII-B discussion):
+    the SIMD side's share of the best point's SRAM and bandwidth budgets,
+    and the fraction of inference-frontier allocations that survive on the
+    training frontier."""
+    bi, bt = inference.best, training.best
+    inf_allocs = {(p.sizes_kb, p.bws) for p in inference.points}
+    trn_allocs = {(p.sizes_kb, p.bws) for p in training.points}
+    overlap = (len(inf_allocs & trn_allocs) / len(inf_allocs)
+               if inf_allocs else 0.0)
+    return {
+        "vmem_share_inf": bi.sizes_kb[3] / bi.total_size_kb,
+        "vmem_share_trn": bt.sizes_kb[3] / bt.total_size_kb,
+        "bw_v_share_inf": bi.bws[3] / bi.total_bw,
+        "bw_v_share_trn": bt.bws[3] / bt.total_bw,
+        "frontier_overlap": overlap,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -464,11 +762,12 @@ class _Engine:
     def _conv_table(self, wbuf_kb: int, ibuf_kb: int, obuf_kb: int) -> ConvTable:
         hw = self.hw.replace(wbuf=wbuf_kb * KB, ibuf=ibuf_kb * KB,
                              obuf=obuf_kb * KB)
-        return ConvTable(hw, self.conv_layers)
+        return get_conv_table(hw, self.conv_layers)
 
     @lru_cache(maxsize=None)
     def _simd_table(self, vmem_kb: int) -> SimdTable:
-        return SimdTable(self.hw.replace(vmem=vmem_kb * KB), self.simd_layers)
+        return get_simd_table(self.hw.replace(vmem=vmem_kb * KB),
+                              self.simd_layers)
 
     @lru_cache(maxsize=None)
     def conv_cycles(self, wbuf_kb: int, ibuf_kb: int, obuf_kb: int,

@@ -19,6 +19,10 @@ from typing import Callable, List, Optional, Sequence, Tuple
 # Systolic-array layers
 # ---------------------------------------------------------------------------
 
+CONV_PHASES = ("fwd", "bwd_dx", "bwd_dw")
+SIMD_PHASES = ("fwd", "bwd")
+
+
 @dataclass(frozen=True)
 class ConvLayer:
     """Conv/FC layer (paper Fig. 3 notation).
@@ -57,6 +61,10 @@ class ConvLayer:
     @property
     def ifmap_elems(self) -> int:
         return self.n * self.ih * self.iw * self.ic
+
+    @property
+    def is_backward(self) -> bool:
+        return self.phase != "fwd"
 
 
 def fc(name: str, n: int, fan_in: int, fan_out: int, has_bias: bool = True,
@@ -111,6 +119,18 @@ class SimdLayer:
     @property
     def elems(self) -> int:
         return self.h * self.w * self.n * self.c
+
+    @property
+    def is_backward(self) -> bool:
+        return self.phase != "fwd"
+
+
+def phase_key(layer) -> str:
+    """Namespaced engine:phase tag of a layer ('conv:fwd', 'conv:bwd_dw',
+    'simd:bwd', ...) — the key space shared by the simulator's per-phase
+    aggregates and the DSE phase-resolved cost attribution."""
+    family = "conv" if isinstance(layer, ConvLayer) else "simd"
+    return f"{family}:{layer.phase}"
 
 
 # -- constructors for each modeled op (paper Table I) -----------------------

@@ -41,6 +41,7 @@ class _Aggregates:
     stall_cycles: int = 0
     compute_by_engine: Dict[str, int] = field(default_factory=dict)
     cycles_by_engine: Dict[str, int] = field(default_factory=dict)
+    cycles_by_phase: Dict[str, int] = field(default_factory=dict)
     dram_by_engine: Dict[str, int] = field(default_factory=dict)
     sram_by_engine: Dict[str, int] = field(default_factory=dict)
     dram_total: int = 0
@@ -62,6 +63,9 @@ class _Aggregates:
             ag.compute_by_engine[e] = \
                 ag.compute_by_engine.get(e, 0) + s.compute_cycles
             ag.cycles_by_engine[e] = ag.cycles_by_engine.get(e, 0) + tc
+            # same namespaced keys as the DSE phase grids ('sa' -> 'conv')
+            pk = f"{'conv' if e == 'sa' else 'simd'}:{r.phase}"
+            ag.cycles_by_phase[pk] = ag.cycles_by_phase.get(pk, 0) + tc
             ag.dram_by_engine[e] = ag.dram_by_engine.get(e, 0) + dram
             ag.sram_by_engine[e] = ag.sram_by_engine.get(e, 0) + sram
             ag.dram_total += dram
@@ -125,6 +129,18 @@ class NetworkReport:
 
     def ops(self) -> Dict[str, int]:
         return dict(self._aggregates().ops)
+
+    def cycles_by_phase(self) -> Dict[str, int]:
+        """Phase-resolved cycle attribution, keyed like the DSE phase
+        grids ('conv:fwd', 'conv:bwd_dx', 'conv:bwd_dw', 'simd:fwd',
+        'simd:bwd'); values sum exactly to ``total_cycles``."""
+        return dict(self._aggregates().cycles_by_phase)
+
+    def phase_shares(self) -> Dict[str, float]:
+        """Each phase's fraction of total cycles."""
+        tot = self.total_cycles
+        return {k: (v / tot if tot else 0.0)
+                for k, v in self._aggregates().cycles_by_phase.items()}
 
     def nonconv_fraction(self, metric: str = "cycles") -> float:
         """Fraction of the metric attributable to non-Conv (SIMD) layers."""

@@ -1,9 +1,13 @@
 """Table V identities: the two backward ops are plain convolutions whose
-dimensions follow the published transformation formulas."""
+dimensions follow the published transformation formulas; Table I: the
+training expansion emits exactly the per-layer-type operation lists."""
+from collections import Counter
+
 import pytest
 
+from repro.core import layers as L
 from repro.core.backward import dw_conv, dx_conv, expand_training_graph
-from repro.core.layers import ConvLayer
+from repro.core.layers import ConvLayer, fc
 from repro.core.networks import resnet50
 
 
@@ -45,6 +49,109 @@ def test_dw_output_matches_weight_volume():
     f = _f(s=1, kh=3, kw=3, oh=56, ow=56, ih=56, iw=56, ic=64, oc=256)
     b = dw_conv(f)
     assert b.ofmap_elems == f.weight_elems
+
+
+@pytest.mark.parametrize("s,k,ih", [(1, 3, 56), (2, 3, 56), (2, 7, 224),
+                                    (1, 1, 28), (4, 11, 224)])
+def test_dx_dw_shape_algebra(s, k, ih):
+    """Table V dimensional algebra across strides/kernels: dilated+padded
+    ifmap extent, flipped-kernel channel swap, dW kernel = S(OH-1)+1."""
+    oh = (ih - k) // s + 1
+    f = _f(s=s, kh=k, kw=k, oh=oh, ow=oh, ih=ih, iw=ih, ic=16, oc=32, n=8)
+    dx, dw = dx_conv(f), dw_conv(f)
+    # dX: ifmap is dL/dX^{l+1} dilated by (S-1) and padded by (K-1)
+    assert dx.ih == f.s * (f.oh - 1) + 1 + 2 * (f.kh - 1)
+    assert dx.s == 1 and dx.phase == "bwd_dx"
+    # dX: flipped kernel swaps the channel axes, keeps the window
+    assert (dx.ic, dx.oc) == (f.oc, f.ic)
+    assert (dx.kh, dx.kw) == (f.kh, f.kw)
+    assert dx.ofmap_elems == f.ifmap_elems
+    # dW: filter is the dilated output gradient -> kernel = S(OH-1)+1
+    assert dw.kh == f.s * (f.oh - 1) + 1
+    assert dw.kw == f.s * (f.ow - 1) + 1
+    assert (dw.ic, dw.n) == (f.n, f.ic)       # batch <-> channel swap
+    assert (dw.oh, dw.ow) == (f.kh, f.kw)     # ofmap = weight geometry
+    assert dw.ofmap_elems == f.weight_elems
+    assert dw.phase == "bwd_dw"
+    # neither backward conv carries a bias
+    assert not dx.has_bias and not dw.has_bias
+
+
+def _ops_added_by(net):
+    """Count of op types the expansion appends beyond the forward graph."""
+    full = expand_training_graph(net)
+    added = full[len(net):]
+    return Counter(getattr(l, "op", f"conv.{l.phase}") for l in added)
+
+
+def test_table1_biased_conv_ops():
+    """Biased (non-input) Conv: dX + dW + bias-grad + 4D and 1D updates."""
+    stem = _f(s=1, kh=3, kw=3, oh=8, ow=8, ih=8, iw=8, ic=4, oc=4, n=2)
+    conv = ConvLayer(name="c", n=2, ic=4, ih=8, iw=8, oc=8, oh=8, ow=8,
+                     kh=3, kw=3, s=1, has_bias=True)
+    ops = _ops_added_by([stem, conv])
+    assert ops["conv.bwd_dx"] == 1            # only the non-input conv
+    assert ops["conv.bwd_dw"] == 2
+    assert ops["bias_grad"] == 1
+    assert ops["update_4d"] == 2
+    assert ops["update_1d"] == 1
+
+
+def test_table1_input_conv_has_no_dx():
+    stem = _f()
+    ops = _ops_added_by([stem])
+    assert ops["conv.bwd_dx"] == 0
+    assert ops["conv.bwd_dw"] == 1
+
+
+def test_table1_bn_ops():
+    """BN: BN_back (Algorithm 1) + scale and shift updates."""
+    ops = _ops_added_by([L.batch_norm("b", 8, 8, 2, 16)])
+    assert ops["bn_back"] == 1
+    assert ops["update_1d"] == 2
+    assert sum(ops.values()) == 3
+
+
+def test_table1_simd_backward_ops():
+    net = [L.relu("r", 8, 8, 2, 16),
+           L.pool("p", 4, 4, 2, 16, 2, 2),
+           L.pool("pa", 2, 2, 2, 16, 2, 2, mode="avg"),
+           L.tensor_add("a", 2, 2, 2, 16),
+           L.global_avg_pool("g", 2, 2, 2, 16)]
+    ops = _ops_added_by(net)
+    assert ops["relu_back"] == 1
+    assert ops["pool_max_back"] == 1
+    assert ops["pool_avg_back"] == 1
+    assert ops["tensor_add"] == 1             # gradient junction
+    assert ops["gap_back"] == 1
+    assert sum(ops.values()) == 5
+
+
+def test_table1_fc_ops():
+    """FC = 1x1 conv: biased FC gets dX + dW + bias grad + both updates."""
+    stem = _f()
+    ops = _ops_added_by([stem, fc("fc", 32, 64, 10)])
+    assert ops["conv.bwd_dx"] == 1
+    assert ops["conv.bwd_dw"] == 2            # stem's dW + fc's dW
+    assert ops["bias_grad"] == 1
+    assert ops["update_4d"] == 2
+    assert ops["update_1d"] == 1
+
+
+def test_backward_layers_tagged_backward():
+    full = expand_training_graph(resnet50(2))
+    n_fwd = len(resnet50(2))
+    assert all(not l.is_backward for l in full[:n_fwd])
+    assert all(l.is_backward for l in full[n_fwd:])
+
+
+def test_expansion_is_positional_not_identity():
+    """A reused (shape-identical, same-object) conv later in the graph must
+    still get a dX; only the *first slot* is the input layer."""
+    conv = _f(s=1, kh=3, kw=3, oh=8, ow=8, ih=8, iw=8, ic=4, oc=4, n=2)
+    ops = _ops_added_by([conv, conv])
+    assert ops["conv.bwd_dx"] == 1
+    assert ops["conv.bwd_dw"] == 2
 
 
 def test_training_graph_contents():

@@ -7,9 +7,11 @@ order), same economic picks."""
 import numpy as np
 import pytest
 
-from repro.core import INFER_PRESETS
-from repro.core.dse import (BWS, SIZES_KB, ConvTable, SimdTable, search,
-                            search_many, search_reference)
+from repro.core import INFER_PRESETS, TRAIN_PRESETS
+from repro.core.backward import expand_training_graph
+from repro.core.dse import (BWS, SIZES_KB, ConvTable, SimdTable,
+                            clear_table_caches, phase_profile, search,
+                            search_many, search_reference, table_cache_stats)
 from repro.core.layers import ConvLayer, SimdLayer, fc, pool, relu, tensor_add
 from repro.core.simulator import simulate_network
 from repro.core.tiling import make_conv_tiling, make_simd_tiling
@@ -145,6 +147,120 @@ def test_network_report_aggregates_cached_and_invalidated():
     assert rep.total_cycles == manual_total + extra.stats.total_cycles
     assert rep.ops()["mac"] == sum(r.stats.ops.get("mac", 0)
                                    for r in rep.layers)
+
+
+def tiny_train_net():
+    """Small graph with every training-relevant layer family: biased and
+    unbiased convs, BN, ReLU, pool, residual add, FC."""
+    import repro.core.layers as L
+    return [
+        _conv("c1", has_bias=False),
+        L.batch_norm("c1.bn", 16, 16, 1, 32),
+        relu("c1.relu", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        tensor_add("a1", 8, 8, 1, 32),
+        fc("fc", 1, 2048, 10),
+    ]
+
+
+def test_training_search_matches_bruteforce():
+    """``search(training=True)`` must be bit-identical to the scalar
+    reference walked over the pre-expanded graph."""
+    net = tiny_train_net()
+    res = search(HW, net, 256, 256, sizes=GRID_SIZES, bws=GRID_BWS,
+                 tol=0.5, training=True)
+    ref = search_reference(HW, expand_training_graph(net), 256, 256,
+                           sizes=GRID_SIZES, bws=GRID_BWS, tol=0.5)
+    _assert_equivalent(res, ref)
+
+
+def test_phase_breakdown_partitions_total():
+    """Per-phase cycles must sum *exactly* to the point's total for best,
+    worst, and every frontier point, and carry all five training phases."""
+    res = search(HW, tiny_train_net(), 256, 256, sizes=GRID_SIZES,
+                 bws=GRID_BWS, tol=0.5, training=True)
+    for p in [res.best, res.worst] + res.points:
+        pb = res.phase_breakdown(p)
+        assert pb.total == p.cycles
+        assert pb.conv_cycles + pb.nonconv_cycles == p.cycles
+        assert pb.fwd_cycles + pb.bwd_cycles == p.cycles
+    pb = res.phase_breakdown()          # defaults to best
+    assert set(pb.as_dict()) == {"conv:fwd", "conv:bwd_dx", "conv:bwd_dw",
+                                 "simd:fwd", "simd:bwd"}
+    assert pb.nonconv_cycles > 0 and pb.bwd_cycles > 0
+
+
+def test_inference_phase_breakdown_is_all_fwd():
+    res = search(HW, tiny_net(), 256, 256, sizes=GRID_SIZES, bws=GRID_BWS,
+                 tol=0.5)
+    pb = res.phase_breakdown()
+    assert set(pb.as_dict()) == {"conv:fwd", "simd:fwd"}
+    assert pb.bwd_cycles == 0
+    assert pb.total == res.best.cycles
+
+
+def test_phase_profile_matches_simulator():
+    """The single-configuration table-path attribution must equal the
+    scalar simulator's per-phase aggregates cycle for cycle."""
+    hw = TRAIN_PRESETS[16]
+    net = tiny_train_net()
+    prof = phase_profile(hw, net, training=True)
+    rep = simulate_network(hw, expand_training_graph(net))
+    assert prof.as_dict() == rep.cycles_by_phase()
+    assert prof.total == rep.total_cycles
+    assert prof.nonconv_share == rep.nonconv_fraction("cycles")
+
+
+def test_table_phase_cycles_partition_totals():
+    """The per-table phase reductions must partition cycles_batch exactly,
+    with real (un-normalized) phases."""
+    net = expand_training_graph(tiny_train_net())
+    convs = [l for l in net if isinstance(l, ConvLayer)]
+    simds = [l for l in net if isinstance(l, SimdLayer)]
+    ct = ConvTable(HW, convs)
+    bw = ([32, 256, 128], [64, 32, 128], [128, 64, 128])
+    per_phase = ct.phase_cycles_batch(*bw)
+    assert set(per_phase) == {"fwd", "bwd_dx", "bwd_dw"}
+    assert (sum(per_phase.values()) == ct.cycles_batch(*bw)).all()
+    st = SimdTable(HW, simds)
+    per_phase = st.phase_cycles_batch([32, 128, 256])
+    assert set(per_phase) == {"fwd", "bwd"}
+    assert (sum(per_phase.values()) == st.cycles_batch([32, 128, 256])).all()
+
+
+def test_simd_table_cache_key_covers_lat_and_bout():
+    """Specs differing only in ALU latencies or b_out must not alias to
+    one cached SimdTable."""
+    from repro.core.dse import get_simd_table
+    clear_table_caches()
+    layers = [relu("r", 16, 16, 1, 32)]
+    base = get_simd_table(HW, layers)
+    slow = get_simd_table(
+        HW.replace(lat={**HW.lat, "max": 4}), layers)
+    assert slow is not base and slow.compute > base.compute
+    wide = get_simd_table(HW.replace(b_out=64), layers)
+    assert wide is not base and wide.b4[0] > base.b4[0]
+
+
+def test_cross_call_table_cache_two_budget_sweep():
+    """A second budget sweep re-uses every ConvTable whose size triple its
+    budget window shares with the first sweep's."""
+    clear_table_caches()
+    net = tiny_net()
+    search(HW, net, 256, 256, sizes=GRID_SIZES, bws=GRID_BWS, tol=0.5)
+    first = table_cache_stats()
+    assert first["conv_misses"] > 0 and first["conv_hits"] == 0
+    # same budget again: all tables cached
+    search(HW, net, 256, 256, sizes=GRID_SIZES, bws=GRID_BWS, tol=0.5)
+    second = table_cache_stats()
+    assert second["conv_misses"] == first["conv_misses"]
+    assert second["conv_hits"] == first["conv_misses"]
+    assert second["simd_hits"] >= first["simd_misses"]
+    # overlapping (wider) budget window: hits for the shared size triples
+    search(HW, net, 192, 192, sizes=GRID_SIZES, bws=GRID_BWS, tol=0.5)
+    third = table_cache_stats()
+    assert third["conv_hits"] > second["conv_hits"]
 
 
 def test_full_default_grid_small_budget():

@@ -5,6 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (installed in CI; optional locally)")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

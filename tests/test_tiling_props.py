@@ -1,5 +1,10 @@
 """Hypothesis property tests on the tiling generator and cost-model
 invariants (the system's load-bearing contracts)."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (installed in CI; optional locally)")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -1,0 +1,68 @@
+"""Regression pin for the paper's headline training claim (abstract /
+Table VI): on a 64x64 processing array, non-convolution operations
+constitute 59.5% of total ResNet-50 training runtime.
+
+The model's phase-resolved attribution brackets that figure on the 64x64
+baseline: the *static* HT3 allocation yields 68.6% and the DSE-optimal
+allocation at the Table VIII 64x64 budget (2048 kB / 2048 bits-per-cycle)
+yields 56.1% — the paper's 59.5% lies strictly inside that band (their
+hand allocation sits between our static preset and our optimizer's pick;
+at 16x16 and 32x32 the same model matches the paper within ~2pp, see
+``benchmarks/table6_resnet50.py``).  Both endpoints are pinned at +/-1pp
+so any cost-model drift that would move the claim is caught, and the
+bracket itself is asserted.
+"""
+import pytest
+
+from repro.core import TRAIN_PRESETS
+from repro.core.dse import phase_profile, search
+from repro.core.networks import resnet50
+
+PAPER_SHARE = 0.595          # abstract: 59.5% on a 64x64 array
+STATIC_SHARE = 0.686         # this model, static HT3 allocation
+OPT_SHARE = 0.561            # this model, DSE-best at the (2048, 2048) budget
+TOL = 0.01                   # one percentage point
+
+
+@pytest.fixture(scope="module")
+def hw64():
+    return TRAIN_PRESETS[64]
+
+
+@pytest.fixture(scope="module")
+def static_profile(hw64):
+    return phase_profile(hw64, resnet50(32, bn=True), training=True)
+
+
+@pytest.fixture(scope="module")
+def opt_result(hw64):
+    return search(hw64, resnet50(32, bn=True), 2048, 2048, training=True)
+
+
+def test_static_share_pinned(static_profile):
+    assert abs(static_profile.nonconv_share - STATIC_SHARE) < TOL
+
+
+def test_optimal_share_pinned(opt_result):
+    pb = opt_result.phase_breakdown()
+    assert abs(pb.nonconv_share - OPT_SHARE) < TOL
+
+
+def test_paper_claim_bracketed(static_profile, opt_result):
+    """The paper's 59.5% falls between the DSE-optimal and the static
+    allocation's non-conv shares on the 64x64 array."""
+    opt = opt_result.phase_breakdown().nonconv_share
+    assert opt < PAPER_SHARE < static_profile.nonconv_share
+
+
+def test_nonconv_dominates_and_backward_dominates(static_profile):
+    """Qualitative halves of the claim: non-conv ops are the majority of
+    training runtime, and the backward+update phases dominate the
+    forward pass (the training graph is ~2x the inference work per
+    direction plus updates)."""
+    assert static_profile.nonconv_share > 0.5
+    assert static_profile.bwd_share > 0.5
+    d = static_profile.as_dict()
+    # dW convs (huge S(OH-1)+1 kernels) are the costliest conv phase
+    assert d["conv:bwd_dw"] > d["conv:fwd"]
+    assert d["conv:bwd_dw"] > d["conv:bwd_dx"]
