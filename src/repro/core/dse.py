@@ -50,6 +50,12 @@ The tensorized path is numerically identical to brute force: the retained
 reference implementation ``search_reference`` walks the same grid with
 scalar calls, and the equivalence is asserted bit-for-bit in
 ``tests/test_dse_equivalence.py``.
+
+``search``/``search_many`` are front-end-pluggable (``method=...``): the
+exhaustive grid above is the default and the reference; ``method="refine"``
+dispatches to the budget-constrained local search in ``core.optimize``,
+which drives the same batched tables off the power-of-two lattice down to
+arbitrary integer splits (see that module's docstring).
 """
 from __future__ import annotations
 
@@ -396,12 +402,29 @@ class _PhaseGrids:
 
 @dataclass
 class DSEResult:
+    """Outcome of one DSE run, from either search front-end.
+
+    Grid results carry the full cost matrix (``grid``) plus the per-phase
+    matrices; refine results instead carry the optimizer's evaluation
+    ``archive`` (every candidate it costed, in evaluation order — the
+    off-lattice analogue of the grid), its ``refine`` trace, and a
+    table-backed phase attribution hook, so ``points``/``within``/
+    ``economic_min_*``/``phase_breakdown`` work identically for both.
+    For refine results ``worst`` is the worst *evaluated* candidate (a
+    local search never visits the global worst), so ``improvement`` is a
+    lower bound on the grid's best/worst ratio."""
     best: DSEPoint
     worst: DSEPoint
     grid: Optional[DSEGrid] = field(default=None, repr=False, compare=False)
     phase_grids: Optional[_PhaseGrids] = field(
         default=None, repr=False, compare=False)
     _frontier: Optional[List[DSEPoint]] = field(
+        default=None, repr=False, compare=False)
+    refine: Optional["RefineTrace"] = field(
+        default=None, repr=False, compare=False)
+    archive: Optional[List[DSEPoint]] = field(
+        default=None, repr=False, compare=False)
+    _phase_at: Optional[object] = field(       # Callable[[DSEPoint], dict]
         default=None, repr=False, compare=False)
 
     @property
@@ -410,21 +433,32 @@ class DSEResult:
 
     @property
     def n_candidates(self) -> int:
-        return self.grid.n_candidates if self.grid is not None else 0
+        """Candidates whose cost was computed: the full grid for the
+        exhaustive front-end, the optimizer's unique evaluations for
+        refine (the denominator/numerator of the >=10x saving claim)."""
+        if self.grid is not None:
+            return self.grid.n_candidates
+        if self.refine is not None:
+            return self.refine.n_evals
+        return 0
 
     @property
     def points(self) -> List[DSEPoint]:
         """The within-15%-of-optimal frontier (paper Table X / Fig. 11).
         Only these points are ever materialized as objects; the full grid
-        stays an array in ``grid.costs``."""
+        stays an array in ``grid.costs`` (grid results) and refine
+        results filter their evaluation archive."""
         if self._frontier is None:
             self._frontier = self.within(FRONTIER_FRAC)
         return self._frontier
 
     def within(self, frac: float) -> List[DSEPoint]:
-        if self.grid is None:
-            raise ValueError("result has no retained grid")
-        return self.grid.points_below(self.best.cycles * (1 + frac))
+        limit = self.best.cycles * (1 + frac)
+        if self.grid is not None:
+            return self.grid.points_below(limit)
+        if self.archive is not None:
+            return [p for p in self.archive if p.cycles <= limit]
+        raise ValueError("result has no retained grid or archive")
 
     def economic_min_sram(self, frac: float = FRONTIER_FRAC) -> DSEPoint:
         return min(self.within(frac), key=lambda p: (p.total_size_kb, p.cycles))
@@ -435,14 +469,19 @@ class DSEResult:
 
     def phase_breakdown(self, point: Optional[DSEPoint] = None
                         ) -> PhaseBreakdown:
-        """Phase-resolved cycle attribution for any candidate on the grid
-        (default: the best point).  The returned cycles partition the
-        point's total exactly."""
-        if self.grid is None or self.phase_grids is None:
-            raise ValueError("result has no retained phase grids")
+        """Phase-resolved cycle attribution for any candidate (default:
+        the best point).  Grid results route the point's coordinates into
+        the per-phase matrices; refine results re-derive the phase sums
+        through the shared cost tables, which works for *any* point —
+        on-lattice or off — and still partitions the total exactly."""
         point = point if point is not None else self.best
-        si, bi = self.grid.locate(point)
-        return PhaseBreakdown.from_dict(self.phase_grids.breakdown_at(si, bi))
+        if self.grid is not None and self.phase_grids is not None:
+            si, bi = self.grid.locate(point)
+            return PhaseBreakdown.from_dict(
+                self.phase_grids.breakdown_at(si, bi))
+        if self._phase_at is not None:
+            return PhaseBreakdown.from_dict(self._phase_at(point))
+        raise ValueError("result has no retained phase grids")
 
 
 # ---------------------------------------------------------------------------
@@ -603,31 +642,41 @@ class _GridEngine:
 
 
 # ---------------------------------------------------------------------------
-# Search
+# Search front-ends
+#
+# ``search``/``search_many`` dispatch on ``method`` through a registry of
+# pluggable front-ends.  Every front-end receives the (already
+# training-expanded) networks plus the budget/grid description and returns
+# per-network ``DSEResult``s:
+#
+#   * "grid"   — the tensorized exhaustive sweep below (the default and
+#                the reference: bit-identical to ``search_reference``).
+#   * "refine" — the budget-constrained local search in ``core.optimize``
+#                (seeded multi-start coordinate descent with successive
+#                lattice refinement down to arbitrary integer splits),
+#                registered lazily on first use.
 # ---------------------------------------------------------------------------
 
-def search_many(hw_base: HardwareSpec, nets: Mapping[str, Sequence[Layer]],
-                size_budget_kb: int, bw_budget: int,
-                sizes: Sequence[int] = SIZES_KB, bws: Sequence[int] = BWS,
-                tol: float = 0.15, lower_bound: bool = True,
-                training: bool = False) -> Dict[str, DSEResult]:
-    """Tensorized exhaustive DSE over several networks at once, sharing the
-    per-size cost tables (Table IX style sweeps build every table once).
+SEARCH_METHODS: Dict[str, object] = {}
 
-    ``training=True`` expands each network through the Table I training
-    graph (forward + backward + updates) once up front; the expanded
-    layers then flow through the same shape-dedup (a dX conv that is
-    shape-identical to a forward conv shares its table column) and the
-    per-phase matrices attribute every candidate's cost to
-    conv fwd/dX/dW and SIMD fwd/bwd.
 
-    ``lower_bound=False`` drops the lower budget bound (used for the
-    Fig. 11 / Table X economic-design landscape, where points far below
-    budget are of interest).
-    """
-    if training:
-        nets = {name: expand_training_graph(list(net))
-                for name, net in nets.items()}
+def register_search_method(name: str, fn) -> None:
+    """Register a search front-end under ``method=name``.  ``fn`` is
+    called as ``fn(hw_base, nets, size_budget_kb, bw_budget, sizes=...,
+    bws=..., tol=..., lower_bound=..., refine=...)`` and must return a
+    ``{name: DSEResult}`` mapping."""
+    SEARCH_METHODS[name] = fn
+
+
+def _grid_search_many(hw_base: HardwareSpec,
+                      nets: Mapping[str, Sequence[Layer]],
+                      size_budget_kb: int, bw_budget: int, *,
+                      sizes: Sequence[int], bws: Sequence[int],
+                      tol: float, lower_bound: bool,
+                      refine=None) -> Dict[str, DSEResult]:
+    """The tensorized exhaustive front-end (``method="grid"``)."""
+    if refine is not None:
+        raise ValueError("refine config only applies to method='refine'")
     lo_s = size_budget_kb * (1 - tol) if lower_bound else 0
     lo_b = bw_budget * (1 - tol) if lower_bound else 0
     size_tuples = _tuples(sizes, 4, lo_s, size_budget_kb * (1 + tol))
@@ -661,21 +710,63 @@ def search_many(hw_base: HardwareSpec, nets: Mapping[str, Sequence[Layer]],
     return out
 
 
+register_search_method("grid", _grid_search_many)
+
+
+def search_many(hw_base: HardwareSpec, nets: Mapping[str, Sequence[Layer]],
+                size_budget_kb: int, bw_budget: int,
+                sizes: Sequence[int] = SIZES_KB, bws: Sequence[int] = BWS,
+                tol: float = 0.15, lower_bound: bool = True,
+                training: bool = False, method: str = "grid",
+                refine=None) -> Dict[str, DSEResult]:
+    """DSE over several networks at once, sharing the per-size cost tables
+    (Table IX style sweeps build every table once).
+
+    ``training=True`` expands each network through the Table I training
+    graph (forward + backward + updates) once up front; the expanded
+    layers then flow through the same shape-dedup (a dX conv that is
+    shape-identical to a forward conv shares its table column) and every
+    candidate's cost stays attributable to conv fwd/dX/dW and SIMD
+    fwd/bwd.
+
+    ``method`` selects the search front-end: ``"grid"`` (default) is the
+    tensorized exhaustive sweep, ``"refine"`` the budget-constrained
+    local search of ``core.optimize`` (pass a ``RefineConfig`` as
+    ``refine`` to control seed/starts/granularity).
+
+    ``lower_bound=False`` drops the lower budget bound (used for the
+    Fig. 11 / Table X economic-design landscape, where points far below
+    budget are of interest).
+    """
+    if training:
+        nets = {name: expand_training_graph(list(net))
+                for name, net in nets.items()}
+    fn = SEARCH_METHODS.get(method)
+    if fn is None and method == "refine":
+        from . import optimize                    # registers itself
+        del optimize
+        fn = SEARCH_METHODS.get(method)
+    if fn is None:
+        raise ValueError(f"unknown search method {method!r}; "
+                         f"registered: {sorted(SEARCH_METHODS)}")
+    return fn(hw_base, nets, size_budget_kb, bw_budget, sizes=sizes,
+              bws=bws, tol=tol, lower_bound=lower_bound, refine=refine)
+
+
 def search(hw_base: HardwareSpec, net: Sequence[Layer],
            size_budget_kb: int, bw_budget: int,
            sizes: Sequence[int] = SIZES_KB, bws: Sequence[int] = BWS,
            tol: float = 0.15, lower_bound: bool = True,
-           training: bool = False, collect: bool = True) -> DSEResult:
-    """Tensorized exhaustive DSE for a single network.
-
-    ``collect`` is retained for API compatibility and ignored: the full
-    grid is kept as an array (``result.grid``), ``result.points`` always
-    materializes only the within-15% frontier.
-    """
-    del collect
+           training: bool = False, method: str = "grid",
+           refine=None) -> DSEResult:
+    """DSE for a single network; see ``search_many`` for the parameters.
+    The full grid is kept as an array (``result.grid``) by the grid
+    front-end, the evaluation archive by refine; ``result.points``
+    materializes only the within-15% frontier either way."""
     return search_many(hw_base, {"net": net}, size_budget_kb, bw_budget,
                        sizes=sizes, bws=bws, tol=tol,
-                       lower_bound=lower_bound, training=training)["net"]
+                       lower_bound=lower_bound, training=training,
+                       method=method, refine=refine)["net"]
 
 
 def phase_profile(hw: HardwareSpec, net: Sequence[Layer],

@@ -14,7 +14,13 @@ hardware" (Sec. VII): it is a deterministic greedy that
      calls out, with kernels up to 223x223),
   2. maximizes T_ic (J-aligned) to reduce psum spill, then grows T_oc
      (K-aligned) within WBuf,
-  3. fills IBuf/OBuf with spatial/batch tile extent.
+  3. fills IBuf/OBuf with spatial/batch tile extent,
+  4. finishes every growth axis with an exact, padding-aware remainder
+     fill (the extent in [current, largest-that-fits] minimizing the
+     ceil-padded extent), so *arbitrary* integer buffer sizes — not just
+     powers of two — translate into distinct tilings.  This is what gives
+     the off-lattice DSE optimizer (``core/optimize.py``) a
+     finer-than-power-of-two design space to search over.
 """
 from __future__ import annotations
 
@@ -71,6 +77,42 @@ def _simd_layer_key(layer: SimdLayer) -> tuple:
 
 def _align_down(v: int, a: int) -> int:
     return max(a, (v // a) * a) if v >= a else v
+
+
+def _max_fit(lo: int, hi: int, fits) -> int:
+    """Largest v in [lo, hi] with fits(v), assuming fits is monotone
+    decreasing in v and fits(lo) holds (binary search)."""
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def _fill_dim(cur: int, dim: int, fits) -> int:
+    """Exact remainder fill for one tile extent: among the extents in
+    [cur, largest-that-fits], pick the one minimizing the ceil-padded
+    extent ``ceil(dim/T) * T`` (tile-grid traffic is proportional to it —
+    growing 8 -> 13 over a dim of 14 would *double* the padded extent),
+    tie-breaking toward the largest T (fewest tiles, least setup
+    overhead).  Never shrinks below ``cur``, so it can only improve on
+    the doubling pass it follows."""
+    if cur >= dim:
+        return cur
+    hi = _max_fit(cur, dim, fits)
+    best_t, best_ext = cur, ceil_div(dim, cur) * cur
+    for m in range(1, ceil_div(dim, cur) + 1):
+        t = ceil_div(dim, m)          # smallest T yielding m tiles
+        if t < cur:
+            break
+        if t > hi:
+            continue
+        ext = m * t
+        if ext < best_ext or (ext == best_ext and t > best_t):
+            best_t, best_ext = t, ext
+    return best_t
 
 
 # ---------------------------------------------------------------------------
@@ -143,13 +185,23 @@ def _derive_conv_tiling(hw: HardwareSpec, layer: ConvLayer) -> ConvTiling:
     while T_kh * T_kw * j0 * k0 > wcap and T_kh > 1:
         T_kh = max(1, T_kh // 2)
 
-    # 2) maximize T_ic (J-aligned) with minimal T_oc, then grow T_oc.
+    # 2) maximize T_ic (J-aligned) with minimal T_oc, then grow T_oc:
+    #    doubling first, then an exact remainder fill to the largest
+    #    K-aligned value the capacity admits (full oc when it fits).  The
+    #    fill is what makes *arbitrary* — non-power-of-two — buffer sizes
+    #    meaningful: without it every capacity between two powers of two
+    #    collapses onto the lower one's tiling.
     T_ic = min(layer.ic, _align_down(wcap // (T_kh * T_kw * k0), hw.J))
     T_ic = max(1, min(T_ic, layer.ic))
     T_oc = k0
     while T_oc * 2 <= layer.oc and T_kh * T_kw * T_ic * T_oc * 2 <= wcap:
         T_oc *= 2
     T_oc = min(T_oc, layer.oc)
+    cap_oc = wcap // (T_kh * T_kw * T_ic)
+    if cap_oc >= layer.oc:
+        T_oc = layer.oc
+    elif cap_oc >= k0:
+        T_oc = max(T_oc, min(layer.oc, _align_down(cap_oc, k0)))
 
     # ifmap cap may also bound T_ic (for 1x1-spatial minimum tiles)
     while T_ic > 1 and (T_kh * T_kw * T_ic) > icap:
@@ -174,6 +226,22 @@ def _derive_conv_tiling(hw: HardwareSpec, layer: ConvLayer) -> ConvTiling:
                 T_oh = min(T_oh * 2, layer.oh); grew = True
             elif dim == "n" and T_n < layer.n and fits(oh, ow, min(n * 2, layer.n)):
                 T_n = min(T_n * 2, layer.n); grew = True
+
+    # 4) remainder fill: grow each spatial/batch dim to the padding-aware
+    #    best extent that still fits (doubling alone strands up to half of
+    #    each capacity, and all of any capacity between two powers of two).
+    grew = True
+    while grew:
+        grew = False
+        v = _fill_dim(T_ow, layer.ow, lambda x: fits(T_oh, x, T_n))
+        if v > T_ow:
+            T_ow = v; grew = True
+        v = _fill_dim(T_oh, layer.oh, lambda x: fits(x, T_ow, T_n))
+        if v > T_oh:
+            T_oh = v; grew = True
+        v = _fill_dim(T_n, layer.n, lambda x: fits(T_oh, T_ow, x))
+        if v > T_n:
+            T_n = v; grew = True
 
     t = ConvTiling(T_oh=T_oh, T_ow=T_ow, T_n=T_n, T_kh=T_kh, T_kw=T_kw,
                    T_ic=T_ic, T_oc=T_oc,
@@ -232,6 +300,18 @@ def _derive_simd_tiling(hw: HardwareSpec, layer: SimdLayer) -> SimdTiling:
     while not simd_tile_fits(hw, layer, t) and t.T_c > 1:
         t = SimdTiling(1, 1, 1, max(1, t.T_c // 2), t_c=min(hw.K, max(1, t.T_c // 2)))
 
+    def with_dims(h: int, w: int, n: int, c: int) -> SimdTiling:
+        return SimdTiling(T_h=h, T_w=w, T_n=n, T_c=c, t_c=min(hw.K, c))
+
+    # exact channel fill: the halving loop above lands on a power-of-two
+    # fraction of the K-aligned start; any capacity between two such
+    # fractions (non-power-of-two VMem sizes) admits a larger tile.
+    if t.T_c < layer.c:
+        c = _fill_dim(t.T_c, layer.c,
+                      lambda x: simd_tile_fits(hw, layer, with_dims(
+                          t.T_h, t.T_w, t.T_n, x)))
+        t = with_dims(t.T_h, t.T_w, t.T_n, c)
+
     grew = True
     while grew:
         grew = False
@@ -243,4 +323,24 @@ def _derive_simd_tiling(hw: HardwareSpec, layer: SimdLayer) -> SimdTiling:
                 T_c=t.T_c, t_c=t.t_c)
             if cand != t and simd_tile_fits(hw, layer, cand):
                 t = cand; grew = True
+
+    # remainder fill on the spatial/batch dims, mirroring the conv path.
+    grew = True
+    while grew:
+        grew = False
+        for dim in ("w", "h", "n"):
+            cur = getattr(t, f"T_{dim}")
+            limit = getattr(layer, dim)
+            if cur >= limit:
+                continue
+            v = _fill_dim(cur, limit,
+                          lambda x: simd_tile_fits(hw, layer, with_dims(
+                              x if dim == "h" else t.T_h,
+                              x if dim == "w" else t.T_w,
+                              x if dim == "n" else t.T_n, t.T_c)))
+            if v > cur:
+                t = with_dims(v if dim == "h" else t.T_h,
+                              v if dim == "w" else t.T_w,
+                              v if dim == "n" else t.T_n, t.T_c)
+                grew = True
     return t

@@ -1,0 +1,282 @@
+"""The ``method="refine"`` local-search DSE front-end (``core.optimize``).
+
+Pins the optimizer's contracts: restricted to the power-of-two lattice it
+reproduces the exhaustive reference's best point bit-identically on the
+Table VIII fixture; unrestricted it is never worse than the exhaustive
+power-of-two optimum on any Table VIII budget — inference *and* training —
+at >=10x fewer candidate evaluations; trajectories are seed-deterministic
+across ``search`` and ``search_many``; and the phase attribution of
+off-lattice points partitions their cycles exactly.
+"""
+import pytest
+
+from repro.core import INFER_PRESETS, TRAIN_PRESETS
+from repro.core.dse import (clear_table_caches, search, search_many,
+                            search_reference, table_cache_stats)
+from repro.core.layers import (ConvLayer, batch_norm, fc, pool, relu,
+                               tensor_add)
+from repro.core.networks import resnet50
+from repro.core.optimize import RefineConfig
+
+BUDGETS = {16: 512, 32: 1024, 64: 2048, 128: 4096}   # Table VIII
+HW16 = INFER_PRESETS[16]
+GRID = (32, 64, 128, 256)
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def tiny_net():
+    return [
+        _conv("c1"),
+        relu("r1", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32, has_bias=False),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        tensor_add("a1", 8, 8, 1, 32),
+        fc("fc", 1, 2048, 100),
+    ]
+
+
+def tiny_train_net():
+    return [
+        _conv("c1", has_bias=False),
+        batch_norm("c1.bn", 16, 16, 1, 32),
+        relu("c1.relu", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        tensor_add("a1", 8, 8, 1, 32),
+        fc("fc", 1, 2048, 10),
+    ]
+
+
+def _hw(presets, jk):
+    return presets.get(jk, presets[64]).replace(J=jk, K=jk)
+
+
+@pytest.fixture(scope="module")
+def table8():
+    """Grid + refine results for every Table VIII budget, ResNet-50
+    inference and training (the shared table cache makes the second
+    front-end per fixture nearly free at the lattice level)."""
+    out = {}
+    for mode, presets, net, training in (
+            ("inference", INFER_PRESETS, resnet50(1, bn=False), False),
+            ("training", TRAIN_PRESETS, resnet50(32, bn=True), True)):
+        for jk, budget in BUDGETS.items():
+            hw = _hw(presets, jk)
+            g = search(hw, net, budget, budget, training=training)
+            r = search(hw, net, budget, budget, training=training,
+                       method="refine")
+            out[(mode, jk)] = (budget, g, r)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: never worse than the exhaustive power-of-two optimum at
+# >=10x fewer candidate evaluations, on every Table VIII budget
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["inference", "training"])
+@pytest.mark.parametrize("jk", [16, 32, 64, 128])
+def test_refine_never_worse_and_10x_cheaper(table8, mode, jk):
+    budget, g, r = table8[(mode, jk)]
+    assert r.best.cycles <= g.best.cycles
+    assert r.n_candidates * 10 <= g.n_candidates
+    assert r.refine.eval_saving >= 10.0
+    # and the result respects the budget band
+    lo, hi = budget * 0.85, budget * 1.15
+    assert lo <= r.best.total_size_kb <= hi
+    assert lo <= r.best.total_bw <= hi
+
+
+def test_refine_beats_lattice_somewhere(table8):
+    """The finer-than-power-of-two granularity must actually pay: on the
+    Table VIII fixtures the refined optimum is *strictly* below the
+    exhaustive lattice optimum (every one of them does today; assert at
+    least the inference 64x64 headline row plus a global any())."""
+    _, g64, r64 = table8[("inference", 64)]
+    assert r64.best.cycles < g64.best.cycles
+    assert any(r.best.cycles < g.best.cycles
+               for _, g, r in table8.values())
+
+
+def test_refine_off_lattice_points_materialized(table8):
+    """The archive materializes evaluated candidates as DSEPoints and
+    the winning configuration sits off the power-of-two lattice."""
+    from repro.core.dse import SIZES_KB, BWS
+    _, g, r = table8[("inference", 64)]
+    assert r.archive and r.n_candidates == len(r.archive)
+    assert any(p == r.best for p in r.archive)
+    assert any(v not in SIZES_KB for v in r.best.sizes_kb) \
+        or any(v not in BWS for v in r.best.bws)
+
+
+# ---------------------------------------------------------------------------
+# Lattice-restricted equivalence with the exhaustive reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("jk", [16, 32, 64, 128])
+def test_lattice_refine_reproduces_grid_best(table8, jk):
+    """Restricted to the power-of-two lattice, refine lands on the
+    tensorized grid's best point bit-identically (Table VIII inference
+    fixture), with the >=10x evaluation saving intact."""
+    budget, g, _ = table8[("inference", jk)]
+    rl = search(_hw(INFER_PRESETS, jk), resnet50(1, bn=False),
+                budget, budget, method="refine",
+                refine=RefineConfig(lattice_only=True))
+    assert rl.best == g.best
+    assert rl.n_candidates * 10 <= g.n_candidates
+
+
+def test_lattice_refine_reproduces_search_reference():
+    """...and bit-identically the scalar brute-force loop itself, on the
+    smallest Table VIII budget (the two exhaustive paths are pinned equal
+    to each other in test_dse_equivalence)."""
+    hw = _hw(INFER_PRESETS, 16)
+    net = resnet50(1, bn=False)
+    ref = search_reference(hw, net, 512, 512, collect=False)
+    rl = search(hw, net, 512, 512, method="refine",
+                refine=RefineConfig(lattice_only=True))
+    assert rl.best == ref.best
+    # every lattice-restricted candidate cost matches the scalar engine's
+    lo, hi = 512 * 0.85, 512 * 1.15
+    for p in rl.archive[::97]:
+        assert lo <= p.total_size_kb <= hi and lo <= p.total_bw <= hi
+
+
+def test_lattice_refine_costs_bit_identical_to_grid():
+    """Every candidate the lattice-restricted optimizer costs must equal
+    the exhaustive grid's entry for the same tuples."""
+    net = tiny_net()
+    g = search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5)
+    rl = search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5,
+                method="refine", refine=RefineConfig(lattice_only=True))
+    for p in rl.archive:
+        si, bi = g.grid.locate(p)
+        assert int(g.grid.costs[si, bi]) == p.cycles
+
+
+# ---------------------------------------------------------------------------
+# Determinism
+# ---------------------------------------------------------------------------
+
+def test_identical_seed_identical_trajectory_and_result():
+    net = tiny_net()
+    kw = dict(sizes=GRID, bws=GRID, tol=0.5, method="refine")
+    r1 = search(HW16, net, 256, 256, refine=RefineConfig(seed=3), **kw)
+    r2 = search(HW16, net, 256, 256, refine=RefineConfig(seed=3), **kw)
+    assert r1.refine.trajectory == r2.refine.trajectory
+    assert r1.best == r2.best and r1.worst == r2.worst
+    assert r1.archive == r2.archive
+    assert r1 == r2                     # dataclass eq: best/worst fields
+
+
+def test_search_many_matches_search_trajectory():
+    """The per-network descent must not depend on what else shares the
+    evaluator: search and search_many produce identical trajectories and
+    results for the same seed."""
+    net, net2 = tiny_net(), tiny_train_net()
+    kw = dict(sizes=GRID, bws=GRID, tol=0.5, method="refine")
+    single = search(HW16, net, 256, 256, refine=RefineConfig(seed=5), **kw)
+    many = search_many(HW16, {"a": net, "b": net2}, 256, 256,
+                       refine=RefineConfig(seed=5), **kw)
+    assert many["a"].refine.trajectory == single.refine.trajectory
+    assert many["a"].best == single.best
+    assert many["a"].archive == single.archive
+
+
+# ---------------------------------------------------------------------------
+# Off-lattice phase attribution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("training", [False, True])
+def test_phase_breakdown_partitions_off_lattice(training):
+    """Phase cycles of refine results partition the point's total exactly
+    for best, worst, and a spread of archived (off-lattice) candidates,
+    for inference (fwd only) and training (conv fwd/dX/dW + SIMD
+    fwd/bwd)."""
+    net = tiny_train_net() if training else tiny_net()
+    r = search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5,
+               training=training, method="refine")
+    for p in [r.best, r.worst] + r.archive[::41]:
+        pb = r.phase_breakdown(p)
+        assert pb.total == p.cycles
+        assert pb.conv_cycles + pb.nonconv_cycles == p.cycles
+        assert pb.fwd_cycles + pb.bwd_cycles == p.cycles
+    keys = set(r.phase_breakdown().as_dict())
+    if training:
+        assert keys == {"conv:fwd", "conv:bwd_dx", "conv:bwd_dw",
+                        "simd:fwd", "simd:bwd"}
+    else:
+        assert keys == {"conv:fwd", "simd:fwd"}
+    # off-lattice evaluation really happened
+    assert any(any(v not in GRID for v in p.sizes_kb + p.bws)
+               for p in r.archive)
+
+
+# ---------------------------------------------------------------------------
+# Result API + table-cache reuse
+# ---------------------------------------------------------------------------
+
+def test_refine_result_frontier_and_economic_api():
+    net = tiny_net()
+    r = search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5,
+               method="refine")
+    assert r.points == r.within(0.15)
+    assert all(p.cycles <= r.best.cycles * 1.15 for p in r.points)
+    assert r.best in r.points
+    eco = r.economic_min_sram()
+    assert eco.total_size_kb <= r.best.total_size_kb
+    assert r.n_candidates == r.refine.n_evals == len(r.archive)
+    assert r.improvement >= 1.0
+
+
+def test_single_engine_nets_supported():
+    """Conv-only and SIMD-only networks run through refine (the other
+    engine's cost is zero)."""
+    conv_only = [_conv("c1"), fc("fc", 1, 2048, 100)]
+    simd_only = [relu("r1", 16, 16, 1, 32), tensor_add("a1", 8, 8, 1, 32)]
+    for net in (conv_only, simd_only):
+        r = search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5,
+                   method="refine")
+        g = search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5)
+        assert r.best.cycles <= g.best.cycles
+        assert r.phase_breakdown().total == r.best.cycles
+
+
+def test_refine_reuses_tables_across_front_ends_and_levels():
+    """A lattice-restricted refine after a grid sweep of the same shapes
+    builds *zero* new conv tables (pure cache hits), and the off-lattice
+    levels add only off-lattice triples on top."""
+    clear_table_caches()
+    net = tiny_net()
+    search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5)
+    after_grid = table_cache_stats()
+    search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5,
+           method="refine", refine=RefineConfig(lattice_only=True))
+    after_lattice = table_cache_stats()
+    assert after_lattice["conv_misses"] == after_grid["conv_misses"]
+    assert after_lattice["conv_hits"] > after_grid["conv_hits"]
+    # seeded rerun of the full refine: every table it needs is now cached
+    search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5,
+           method="refine")
+    mid = table_cache_stats()
+    search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5,
+           method="refine")
+    final = table_cache_stats()
+    assert final["conv_misses"] == mid["conv_misses"]
+    assert final["simd_misses"] == mid["simd_misses"]
+
+
+def test_unknown_method_and_misplaced_refine_config_raise():
+    net = tiny_net()
+    with pytest.raises(ValueError, match="unknown search method"):
+        search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5,
+               method="anneal")
+    with pytest.raises(ValueError, match="refine config"):
+        search(HW16, net, 256, 256, sizes=GRID, bws=GRID, tol=0.5,
+               method="grid", refine=RefineConfig())

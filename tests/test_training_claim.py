@@ -3,14 +3,17 @@ Table VI): on a 64x64 processing array, non-convolution operations
 constitute 59.5% of total ResNet-50 training runtime.
 
 The model's phase-resolved attribution brackets that figure on the 64x64
-baseline: the *static* HT3 allocation yields 68.6% and the DSE-optimal
+baseline: the *static* HT3 allocation yields 67.9% and the DSE-optimal
 allocation at the Table VIII 64x64 budget (2048 kB / 2048 bits-per-cycle)
-yields 56.1% — the paper's 59.5% lies strictly inside that band (their
+yields 55.4% — the paper's 59.5% lies strictly inside that band (their
 hand allocation sits between our static preset and our optimizer's pick;
 at 16x16 and 32x32 the same model matches the paper within ~2pp, see
 ``benchmarks/table6_resnet50.py``).  Both endpoints are pinned at +/-1pp
 so any cost-model drift that would move the claim is caught, and the
-bracket itself is asserted.
+bracket itself is asserted.  (The endpoints moved from 68.6%/56.1% when
+the tiling generator gained the exact padding-aware remainder fill —
+better buffer utilization trims SIMD stalls and closes 0.7pp of the
+static-allocation gap vs the paper's 59.5%.)
 """
 import pytest
 
@@ -19,8 +22,8 @@ from repro.core.dse import phase_profile, search
 from repro.core.networks import resnet50
 
 PAPER_SHARE = 0.595          # abstract: 59.5% on a 64x64 array
-STATIC_SHARE = 0.686         # this model, static HT3 allocation
-OPT_SHARE = 0.561            # this model, DSE-best at the (2048, 2048) budget
+STATIC_SHARE = 0.679         # this model, static HT3 allocation
+OPT_SHARE = 0.554            # this model, DSE-best at the (2048, 2048) budget
 TOL = 0.01                   # one percentage point
 
 
