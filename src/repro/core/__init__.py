@@ -6,6 +6,9 @@ from .hardware import (HI1, HI2, HI3, HT1, HT2, HT3, INFER_PRESETS,
 from .layers import ConvLayer, SimdLayer, fc, phase_key
 from .simulator import NetworkReport, simulate, simulate_network
 from .backward import dx_conv, dw_conv, expand_training_graph
+from .objectives import (EDP, Cycles, CyclesUnderPowerCap, Energy,
+                         Objective, register_objective, resolve_objective)
+from .study import Study, Workload
 
 __all__ = [
     "HardwareSpec", "HT1", "HT2", "HT3", "HI1", "HI2", "HI3",
@@ -13,4 +16,6 @@ __all__ = [
     "ConvLayer", "SimdLayer", "fc", "phase_key",
     "NetworkReport", "simulate", "simulate_network",
     "dx_conv", "dw_conv", "expand_training_graph",
+    "Study", "Workload", "Objective", "Cycles", "Energy", "EDP",
+    "CyclesUnderPowerCap", "register_objective", "resolve_objective",
 ]

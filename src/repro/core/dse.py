@@ -51,11 +51,25 @@ reference implementation ``search_reference`` walks the same grid with
 scalar calls, and the equivalence is asserted bit-for-bit in
 ``tests/test_dse_equivalence.py``.
 
-``search``/``search_many`` are front-end-pluggable (``method=...``): the
-exhaustive grid above is the default and the reference; ``method="refine"``
-dispatches to the budget-constrained local search in ``core.optimize``,
-which drives the same batched tables off the power-of-two lattice down to
-arbitrary integer splits (see that module's docstring).
+The search is front-end-pluggable (``method=...``): the exhaustive grid
+above is the default and the reference; ``method="refine"`` dispatches to
+the budget-constrained local search in ``core.optimize``, which drives
+the same batched tables off the power-of-two lattice down to arbitrary
+integer splits (see that module's docstring).
+
+Both tables carry, alongside the cycle quantities, the per-layer *energy*
+tensors of Sec. VI — busy cycles, SRAM bits per buffer, DRAM bits — all
+bandwidth-independent, so any ``Objective`` (energy, EDP, power caps; see
+``core.objectives``) prices the whole grid from one vectorized
+``compute_energy_batch`` application and a cycles sweep followed by an
+energy sweep rebuilds nothing.  ``prefetch_conv_tables`` fans uncached
+per-size-triple builds across worker processes (``Study(workers=N)`` /
+``$REPRO_DSE_WORKERS``), bit-identical to serial.
+
+The preferred entry point is ``repro.core.study.Study`` (Workload /
+Objective / Study); ``search``/``search_many`` below survive as thin
+deprecation shims over a default ``Study``, bit-identical under the
+default cycles objective.
 """
 from __future__ import annotations
 
@@ -67,8 +81,11 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from .backward import expand_training_graph
-from .conv_model import conv_multipliers, conv_segment_quantities
+from .conv_model import (conv_dram_bits, conv_multipliers,
+                         conv_segment_quantities, conv_sram_bits)
+from .energy import DEFAULT_ENERGY, EnergyModel, compute_energy_batch
 from .hardware import KB, HardwareSpec
+from .objectives import Cycles, MetricBatch, Objective, resolve_objective
 from .layers import ConvLayer, SimdLayer
 from .simd_model import simd_part_tile_bits, simulate_simd
 from .tiling import (_conv_hw_key, _conv_layer_key, _simd_hw_key,
@@ -91,7 +108,12 @@ class ConvTable:
     """Bandwidth-independent per-layer quantities for fixed buffer sizes.
 
     Arrays are indexed [layer]; ``cycles_batch`` broadcasts them against a
-    vector of bandwidth triples.
+    vector of bandwidth triples.  Alongside the cycle quantities the table
+    carries the per-layer *energy* tensors — busy (compute) cycles, SRAM
+    bits per buffer, total DRAM bits (Secs. IV-C, Table III) — so any
+    energy-aware objective prices a candidate from the same cached table
+    that prices its cycles (a cycles sweep followed by an energy sweep
+    rebuilds nothing).
     """
 
     def __init__(self, hw: HardwareSpec, layers: Sequence[ConvLayer]):
@@ -103,6 +125,10 @@ class ConvTable:
         self.w_bits = np.zeros(n); self.wb_bits = np.zeros(n)
         self.i_bits = np.zeros(n)
         self.ps_bits = np.zeros(n); self.pls_bits = np.zeros(n)
+        self.busy = np.zeros(n, dtype=np.int64)      # compute cycles (C_SA)
+        self.dram = np.zeros(n, dtype=np.int64)      # all streams, bits
+        self.sram = {buf: np.zeros(n, dtype=np.int64)
+                     for buf in ("wbuf", "ibuf", "obuf", "bbuf")}
         for x, layer in enumerate(layers):
             t = make_conv_tiling(hw, layer)
             m = conv_multipliers(layer, t)
@@ -113,6 +139,10 @@ class ConvTable:
             self.w_bits[x], self.wb_bits[x] = q.w_bits, q.wb_bits
             self.i_bits[x] = q.i_bits
             self.ps_bits[x], self.pls_bits[x] = q.ps_bits, q.pls_bits
+            self.busy[x] = q.c_tile * (q.o1 + q.o2 + q.o4 + q.o5)
+            self.dram[x] = sum(conv_dram_bits(hw, layer, t, m).values())
+            for buf, bits in conv_sram_bits(hw, layer, t, m).items():
+                self.sram[buf][x] = bits
 
     def layer_cycles_batch(self, bw_w, bw_i, bw_o) -> np.ndarray:
         """Per-layer segment-summed cycles for a *vector* of bandwidth
@@ -167,11 +197,14 @@ class SimdTable:
         self.phases: Tuple[str, ...] = tuple(l.phase for l in layers)
         self.layer_compute: List[int] = []
         self.layer_rows: List[Tuple[int, int]] = []
+        layer_dram, layer_sram = [], []
         for layer in layers:
             t = make_simd_tiling(hw, layer)
             st = simulate_simd(hw, layer, t, stall_model="no_stall")
             self.compute += st.compute_cycles
             self.layer_compute.append(st.compute_cycles)
+            layer_dram.append(st.dram_total_bits)
+            layer_sram.append(st.sram_total_bits)
             m_h = ceil_div(layer.h, t.T_h); m_w = ceil_div(layer.w, t.T_w)
             m_n = ceil_div(layer.n, t.T_n); m_c = ceil_div(layer.c, t.T_c)
             start = len(rows_b4)
@@ -184,6 +217,11 @@ class SimdTable:
         self.b1 = np.array(rows_b1, dtype=float)
         self.m_hwn = np.array(rows_mhwn, dtype=float)
         self.m_c = np.array(rows_mc, dtype=float)
+        # Energy tensors (Eqs. 34-36): busy cycles C_SIMD, VMem bits, DRAM
+        # bits per layer — bandwidth-independent, cached with the table.
+        self.busy = np.array(self.layer_compute, dtype=np.int64)
+        self.dram = np.array(layer_dram, dtype=np.int64)
+        self.sram_vmem = np.array(layer_sram, dtype=np.int64)
 
     def row_stall_batch(self, bw_v) -> np.ndarray:
         """Per-row stall cycles for a vector of bw_v: float64 [m x n_rows]."""
@@ -229,18 +267,35 @@ class SimdTable:
 
 _CONV_TABLE_CACHE: Dict[tuple, ConvTable] = {}
 _SIMD_TABLE_CACHE: Dict[tuple, SimdTable] = {}
+_PREFETCHED_UNTOUCHED: set = set()      # parallel builds not yet fetched
 _TABLE_CACHE_STATS = {"conv_hits": 0, "conv_misses": 0,
-                      "simd_hits": 0, "simd_misses": 0}
+                      "simd_hits": 0, "simd_misses": 0,
+                      "conv_parallel_builds": 0}
+
+
+def _conv_table_key(hw: HardwareSpec, layers: Sequence[ConvLayer]) -> tuple:
+    return (_conv_hw_key(hw),
+            tuple((_conv_layer_key(l), l.phase) for l in layers))
+
+
+def _simd_table_key(hw: HardwareSpec, layers: Sequence[SimdLayer]) -> tuple:
+    return (_simd_hw_key(hw), hw.b_out, tuple(sorted(hw.lat.items())),
+            tuple((_simd_layer_key(l), l.phase) for l in layers))
 
 
 def get_conv_table(hw: HardwareSpec, layers: Sequence[ConvLayer]) -> ConvTable:
     """Shared, process-lifetime ConvTable constructor."""
-    key = (_conv_hw_key(hw),
-           tuple((_conv_layer_key(l), l.phase) for l in layers))
+    key = _conv_table_key(hw, layers)
     t = _CONV_TABLE_CACHE.get(key)
     if t is None:
         _TABLE_CACHE_STATS["conv_misses"] += 1
         t = _CONV_TABLE_CACHE[key] = ConvTable(hw, layers)
+    elif key in _PREFETCHED_UNTOUCHED:
+        # First retrieval of a parallel-prefetched table: account it as
+        # the miss the caller's serial loop would have recorded, so
+        # hit/miss statistics are identical between workers=0 and >1.
+        _PREFETCHED_UNTOUCHED.discard(key)
+        _TABLE_CACHE_STATS["conv_misses"] += 1
     else:
         _TABLE_CACHE_STATS["conv_hits"] += 1
     return t
@@ -248,8 +303,7 @@ def get_conv_table(hw: HardwareSpec, layers: Sequence[ConvLayer]) -> ConvTable:
 
 def get_simd_table(hw: HardwareSpec, layers: Sequence[SimdLayer]) -> SimdTable:
     """Shared, process-lifetime SimdTable constructor."""
-    key = (_simd_hw_key(hw), hw.b_out, tuple(sorted(hw.lat.items())),
-           tuple((_simd_layer_key(l), l.phase) for l in layers))
+    key = _simd_table_key(hw, layers)
     t = _SIMD_TABLE_CACHE.get(key)
     if t is None:
         _TABLE_CACHE_STATS["simd_misses"] += 1
@@ -259,17 +313,72 @@ def get_simd_table(hw: HardwareSpec, layers: Sequence[SimdLayer]) -> SimdTable:
     return t
 
 
-def table_cache_stats() -> Dict[str, int]:
-    """Hit/miss counters plus current entry counts of the shared caches."""
-    return dict(_TABLE_CACHE_STATS,
-                conv_entries=len(_CONV_TABLE_CACHE),
-                simd_entries=len(_SIMD_TABLE_CACHE))
+def _build_conv_table(args: Tuple[HardwareSpec, Tuple[ConvLayer, ...]]
+                      ) -> ConvTable:
+    """Worker-process entry point for the parallel table prefetch."""
+    hw, layers = args
+    return ConvTable(hw, layers)
+
+
+def prefetch_conv_tables(hws: Sequence[HardwareSpec],
+                         layers: Sequence[ConvLayer],
+                         workers: int) -> None:
+    """Build the ConvTables for every hardware variant not already cached,
+    fanned out across ``workers`` processes, and seed the shared cache.
+
+    The per-size-triple builds are independent (the remaining serial
+    bottleneck of the tensorized DSE: one greedy tiling derivation per
+    unique size triple x layer shape), so the fan-out is embarrassingly
+    parallel and — each build being deterministic — bit-identical to the
+    serial path.  Each prefetched table is accounted as a miss on its
+    first retrieval (not a hit), so cache statistics match the serial
+    path exactly; callers with ``workers <= 1`` (or a single missing
+    table, or no fork start method) fall back to serial implicitly."""
+    missing = [(key, hw) for hw in dict.fromkeys(hws)
+               if (key := _conv_table_key(hw, layers))
+               not in _CONV_TABLE_CACHE]
+    if workers <= 1 or len(missing) < 2:
+        return
+    from concurrent.futures import ProcessPoolExecutor
+    from multiprocessing import get_context
+    try:
+        ctx = get_context("fork")      # cheap workers via COW; no re-import
+    except ValueError:                 # platform without fork: stay serial
+        return
+    layers = tuple(layers)
+    n = min(int(workers), len(missing))
+    with ProcessPoolExecutor(max_workers=n, mp_context=ctx) as pool:
+        tables = pool.map(_build_conv_table,
+                          [(hw, layers) for _, hw in missing],
+                          chunksize=max(1, len(missing) // (4 * n)))
+        for (key, _), table in zip(missing, tables):
+            _CONV_TABLE_CACHE[key] = table
+            _PREFETCHED_UNTOUCHED.add(key)
+            _TABLE_CACHE_STATS["conv_parallel_builds"] += 1
+
+
+def table_cache_stats() -> Dict[str, object]:
+    """Hit/miss counters plus current entry counts of the shared caches.
+    ``by_kind`` nests the same numbers per table kind for dashboards that
+    track conv and simd (and future kinds) separately."""
+    stats = dict(_TABLE_CACHE_STATS,
+                 conv_entries=len(_CONV_TABLE_CACHE),
+                 simd_entries=len(_SIMD_TABLE_CACHE))
+    stats["by_kind"] = {
+        "conv": {"hits": stats["conv_hits"], "misses": stats["conv_misses"],
+                 "entries": stats["conv_entries"],
+                 "parallel_builds": stats["conv_parallel_builds"]},
+        "simd": {"hits": stats["simd_hits"], "misses": stats["simd_misses"],
+                 "entries": stats["simd_entries"], "parallel_builds": 0},
+    }
+    return stats
 
 
 def clear_table_caches() -> None:
     """Drop all cached tables and zero the counters (benchmark fairness)."""
     _CONV_TABLE_CACHE.clear()
     _SIMD_TABLE_CACHE.clear()
+    _PREFETCHED_UNTOUCHED.clear()
     for k in _TABLE_CACHE_STATS:
         _TABLE_CACHE_STATS[k] = 0
 
@@ -361,9 +470,12 @@ class DSEGrid:
                         self.bw_tuples[flat_index % n_bw],
                         int(self.costs.flat[flat_index]))
 
-    def points_below(self, limit: float) -> List[DSEPoint]:
-        """Materialize DSEPoints with cycles <= limit, in grid order."""
-        idx = np.nonzero(self.costs.ravel() <= limit)[0]
+    def points_below(self, limit: float,
+                     values: Optional[np.ndarray] = None) -> List[DSEPoint]:
+        """Materialize DSEPoints whose value (cycles by default, or the
+        given objective-score array) is <= limit, in grid order."""
+        vals = self.costs if values is None else values
+        idx = np.nonzero(vals.ravel() <= limit)[0]
         return [self.point(int(i)) for i in idx]
 
     def locate(self, point: DSEPoint) -> Tuple[int, int]:
@@ -400,6 +512,67 @@ class _PhaseGrids:
         return out
 
 
+@dataclass(eq=False)
+class _EnergyFields:
+    """Per-candidate energy inputs over the grid's separable axes.
+
+    The five quantities ``compute_energy`` needs — busy cycles per
+    engine, SRAM bits per buffer, DRAM bits — are bandwidth-independent,
+    so one vector over the unique size triples (conv side) plus one over
+    the unique VMem values (SIMD side) prices the whole grid; ``grids``
+    broadcasts them (via the ``s3_of``/``v_of`` row projections) against
+    the cycles matrix through the vectorized energy model.  Kept on every
+    grid result and applied lazily, so pure-cycles searches never pay."""
+    hw: HardwareSpec
+    em: EnergyModel
+    conv: Dict[str, np.ndarray]          # over size triples
+    simd: Dict[str, np.ndarray]          # over vmem values
+    s3_of: np.ndarray
+    v_of: np.ndarray
+    sizes_kb: np.ndarray                 # [n_size_tuples x 4]
+
+    def grids(self, l_total: np.ndarray) -> Dict[str, np.ndarray]:
+        """The full vectorized energy report, shaped like ``l_total``
+        ([n_size_tuples x n_bw_tuples] cycles)."""
+        def col(v: np.ndarray) -> np.ndarray:
+            return v[:, None]
+
+        conv, simd = self.conv, self.simd
+        sram_bits = {"wbuf": col(conv["wbuf"][self.s3_of]),
+                     "ibuf": col(conv["ibuf"][self.s3_of]),
+                     "obuf": col(conv["obuf"][self.s3_of]),
+                     "bbuf": col(conv["bbuf"][self.s3_of]),
+                     "vmem": col(simd["vmem"][self.v_of])}
+        sram_sizes = {"wbuf": col(self.sizes_kb[:, 0] * KB),
+                      "ibuf": col(self.sizes_kb[:, 1] * KB),
+                      "obuf": col(self.sizes_kb[:, 2] * KB),
+                      "bbuf": self.hw.bbuf,
+                      "vmem": col(self.sizes_kb[:, 3] * KB)}
+        return compute_energy_batch(
+            self.hw, em=self.em,
+            c_sa=col(conv["busy"][self.s3_of]),
+            c_simd=col(simd["busy"][self.v_of]),
+            l_total=l_total,
+            sram_bits=sram_bits, sram_sizes=sram_sizes,
+            dram_bits=col(conv["dram"][self.s3_of]
+                          + simd["dram"][self.v_of]))
+
+
+def _pareto_mask(cycles: np.ndarray, energy: np.ndarray) -> np.ndarray:
+    """Boolean mask of the 2-D Pareto frontier (minimize both).  Weak
+    dominance: of several candidates with identical (cycles, energy) the
+    first in input order is kept."""
+    n = len(cycles)
+    order = np.lexsort((np.arange(n), energy, cycles))
+    keep = np.zeros(n, dtype=bool)
+    best_e = np.inf
+    for i in order:
+        if energy[i] < best_e:
+            keep[i] = True
+            best_e = energy[i]
+    return keep
+
+
 @dataclass
 class DSEResult:
     """Outcome of one DSE run, from either search front-end.
@@ -412,7 +585,15 @@ class DSEResult:
     ``economic_min_*``/``phase_breakdown`` work identically for both.
     For refine results ``worst`` is the worst *evaluated* candidate (a
     local search never visits the global worst), so ``improvement`` is a
-    lower bound on the grid's best/worst ratio."""
+    lower bound on the grid's best/worst ratio.
+
+    ``objective`` names the metric the search minimized; ``best``/
+    ``worst``/``points``/``within`` are all in terms of its score (for
+    the default cycles objective the score IS the cycle count, so the
+    legacy behavior is unchanged bit for bit).  Independently of the
+    objective, every result can price any of its candidates —
+    ``energy_of``/``power_of``/``edp_of``/``energy_report`` — and
+    ``pareto()`` materializes the 2-D (cycles, energy) frontier."""
     best: DSEPoint
     worst: DSEPoint
     grid: Optional[DSEGrid] = field(default=None, repr=False, compare=False)
@@ -425,6 +606,19 @@ class DSEResult:
     archive: Optional[List[DSEPoint]] = field(
         default=None, repr=False, compare=False)
     _phase_at: Optional[object] = field(       # Callable[[DSEPoint], dict]
+        default=None, repr=False, compare=False)
+    objective: str = "cycles"
+    grid_scores: Optional[np.ndarray] = field(   # None -> grid.costs
+        default=None, repr=False, compare=False)
+    archive_scores: Optional[List[float]] = field(  # None -> archive cycles
+        default=None, repr=False, compare=False)
+    _energy: Optional[_EnergyFields] = field(
+        default=None, repr=False, compare=False)
+    _energy_at: Optional[object] = field(      # Callable[[DSEPoint], dict]
+        default=None, repr=False, compare=False)
+    _energy_many: Optional[object] = field(    # Callable[[pts], E_total arr]
+        default=None, repr=False, compare=False)
+    _energy_grids: Optional[Dict[str, np.ndarray]] = field(
         default=None, repr=False, compare=False)
 
     @property
@@ -442,22 +636,118 @@ class DSEResult:
             return self.refine.n_evals
         return 0
 
+    # ---- objective scores --------------------------------------------------
+
+    @property
+    def best_score(self) -> float:
+        """The minimized objective score of ``best`` (== ``best.cycles``
+        for the cycles objective)."""
+        return self.score_of(self.best)
+
+    def score_of(self, point: DSEPoint) -> float:
+        """The objective score of any evaluated candidate."""
+        if self.grid is not None:
+            if self.grid_scores is None:
+                return point.cycles
+            si, bi = self.grid.locate(point)
+            return float(self.grid_scores[si, bi])
+        if self.archive is not None:
+            if self.archive_scores is None:
+                return point.cycles
+            return float(self.archive_scores[self._archive_index(point)])
+        raise ValueError("result has no retained grid or archive")
+
+    def _archive_index(self, point: DSEPoint) -> int:
+        if not hasattr(self, "_arch_idx"):
+            self._arch_idx = {(p.sizes_kb, p.bws): i
+                              for i, p in enumerate(self.archive)}
+        try:
+            return self._arch_idx[(point.sizes_kb, point.bws)]
+        except KeyError:
+            raise ValueError(f"point {point} was never evaluated") from None
+
+    # ---- energy accessors --------------------------------------------------
+
+    def _grid_energy(self) -> Dict[str, np.ndarray]:
+        if self._energy_grids is None:
+            if self._energy is None:
+                raise ValueError("result carries no energy tensors")
+            self._energy_grids = self._energy.grids(self.grid.costs)
+        return self._energy_grids
+
+    def energy_report(self, point: Optional[DSEPoint] = None
+                      ) -> Dict[str, float]:
+        """The full Sec. VI energy/power breakdown of any evaluated
+        candidate (default: best) — the vectorized analogue of
+        ``NetworkReport.energy``, keys as in ``compute_energy``."""
+        point = point if point is not None else self.best
+        if self.grid is not None:
+            si, bi = self.grid.locate(point)
+            return {k: float(v[si, bi])
+                    for k, v in self._grid_energy().items()}
+        if self._energy_at is not None:
+            return {k: float(v) for k, v in self._energy_at(point).items()}
+        raise ValueError("result carries no energy tensors")
+
+    def energy_of(self, point: Optional[DSEPoint] = None) -> float:
+        """E_total (Joules) of any evaluated candidate (default: best)."""
+        return self.energy_report(point)["E_total"]
+
+    def power_of(self, point: Optional[DSEPoint] = None) -> float:
+        """P_avg (Watts) of any evaluated candidate (default: best)."""
+        return self.energy_report(point)["P_avg"]
+
+    def edp_of(self, point: Optional[DSEPoint] = None) -> float:
+        """Energy-delay product (Joule-seconds) of any candidate."""
+        rep = self.energy_report(point)
+        return rep["E_total"] * rep["runtime_s"]
+
+    def pareto(self) -> List[DSEPoint]:
+        """The 2-D (cycles, energy) Pareto frontier over every evaluated
+        candidate, in grid/evaluation order: no frontier member is beaten
+        on both metrics by any other candidate.  Configurations achieving
+        the minimum cycles and the minimum energy are always represented
+        (on an exact tie in one metric, the representative is the tied
+        point with the better other metric)."""
+        if self.grid is not None:
+            cycles = self.grid.costs.ravel()
+            energy = self._grid_energy()["E_total"].ravel()
+            idx = np.nonzero(_pareto_mask(cycles, energy))[0]
+            return [self.grid.point(int(i)) for i in idx]
+        if self.archive is not None:
+            cycles = np.array([p.cycles for p in self.archive], dtype=float)
+            if self._energy_many is not None:
+                energy = np.asarray(self._energy_many(self.archive))
+            else:
+                energy = np.array([self.energy_of(p) for p in self.archive])
+            mask = _pareto_mask(cycles, energy)
+            return [p for p, k in zip(self.archive, mask) if k]
+        raise ValueError("result has no retained grid or archive")
+
+    # ---- frontiers ---------------------------------------------------------
+
     @property
     def points(self) -> List[DSEPoint]:
-        """The within-15%-of-optimal frontier (paper Table X / Fig. 11).
-        Only these points are ever materialized as objects; the full grid
-        stays an array in ``grid.costs`` (grid results) and refine
-        results filter their evaluation archive."""
+        """The within-15%-of-optimal frontier (paper Table X / Fig. 11),
+        measured in the result's objective.  Only these points are ever
+        materialized as objects; the full grid stays an array in
+        ``grid.costs`` (grid results) and refine results filter their
+        evaluation archive."""
         if self._frontier is None:
             self._frontier = self.within(FRONTIER_FRAC)
         return self._frontier
 
     def within(self, frac: float) -> List[DSEPoint]:
-        limit = self.best.cycles * (1 + frac)
+        """Candidates whose objective score is within ``frac`` of the
+        optimum (infeasible candidates — score inf — never qualify)."""
+        limit = self.best_score * (1 + frac)
         if self.grid is not None:
-            return self.grid.points_below(limit)
+            return self.grid.points_below(limit, self.grid_scores)
         if self.archive is not None:
-            return [p for p in self.archive if p.cycles <= limit]
+            if self.archive_scores is None:
+                return [p for p in self.archive if p.cycles <= limit]
+            return [p for p, s in zip(self.archive, self.archive_scores)
+                    if s <= limit]
         raise ValueError("result has no retained grid or archive")
 
     def economic_min_sram(self, frac: float = FRONTIER_FRAC) -> DSEPoint:
@@ -571,14 +861,19 @@ class _GridEngine:
             self.simd_phase_ids[name] = pids
 
     def conv_matrices(self, s3s: Sequence[Tuple[int, int, int]],
-                      b3s: Sequence[Tuple[int, int, int]]
+                      b3s: Sequence[Tuple[int, int, int]],
+                      workers: int = 0
                       ) -> Tuple[Dict[str, np.ndarray],
+                                 Dict[str, Dict[str, np.ndarray]],
                                  Dict[str, Dict[str, np.ndarray]]]:
         """Per-network [n_size_triples x n_bw_triples] conv-cost matrices:
-        (totals, per-phase).  Totals are computed over the full column list
-        exactly as before the phase split (same summation order, hence
-        bit-identical to the scalar reference); phase matrices partition
-        them."""
+        (totals, per-phase, energy fields).  Totals are computed over the
+        full column list exactly as before the phase split (same summation
+        order, hence bit-identical to the scalar reference); phase matrices
+        partition them.  The energy fields are per-network vectors over the
+        size triples — busy cycles, SRAM bits per buffer, DRAM bits — the
+        bandwidth-independent half of the Sec. VI model.  ``workers > 1``
+        fans the uncached table builds out across processes first."""
         bw_w = np.array([b[0] for b in b3s], dtype=float)
         bw_i = np.array([b[1] for b in b3s], dtype=float)
         bw_o = np.array([b[2] for b in b3s], dtype=float)
@@ -591,6 +886,15 @@ class _GridEngine:
                         for ph in phases} if len(phases) > 1
                  else {ph: mats[name] for ph in phases}
                  for name, phases in self.conv_phase_cols.items()}
+        efields = {name: {k: np.zeros(len(s3s), dtype=np.int64)
+                          for k in ("busy", "wbuf", "ibuf", "obuf",
+                                    "bbuf", "dram")}
+                   for name in self.conv_cols}
+        if workers > 1:
+            prefetch_conv_tables(
+                [self.hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
+                 for wb, ib, ob in s3s],
+                self._conv_union, workers)
         for si, (wb, ib, ob) in enumerate(s3s):
             hw = self.hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
             table = get_conv_table(hw, self._conv_union)
@@ -599,18 +903,24 @@ class _GridEngine:
                 if cols:
                     mats[name][si] = per_layer[:, cols].sum(axis=1) \
                         .astype(np.int64)
+                    e = efields[name]
+                    e["busy"][si] = table.busy[cols].sum()
+                    e["dram"][si] = table.dram[cols].sum()
+                    for buf in ("wbuf", "ibuf", "obuf", "bbuf"):
+                        e[buf][si] = table.sram[buf][cols].sum()
                 pcs = self.conv_phase_cols[name]
                 if len(pcs) > 1:
                     for ph, pc in pcs.items():
                         pmats[name][ph][si] = per_layer[:, pc].sum(axis=1) \
                             .astype(np.int64)
-        return mats, pmats
+        return mats, pmats, efields
 
     def simd_matrices(self, vmems: Sequence[int], bw_vs: Sequence[int]
                       ) -> Tuple[Dict[str, np.ndarray],
+                                 Dict[str, Dict[str, np.ndarray]],
                                  Dict[str, Dict[str, np.ndarray]]]:
         """Per-network [n_vmem x n_bw_v] SIMD-cost matrices:
-        (totals, per-phase)."""
+        (totals, per-phase, energy fields over the vmem values)."""
         bw_v = np.array(bw_vs, dtype=float)
         mats = {name: np.zeros((len(vmems), len(bw_vs)), dtype=np.int64)
                 for name in self.simd_ids}
@@ -619,6 +929,9 @@ class _GridEngine:
                         for ph in phases} if len(phases) > 1
                  else {ph: mats[name] for ph in phases}
                  for name, phases in self.simd_phase_ids.items()}
+        efields = {name: {k: np.zeros(len(vmems), dtype=np.int64)
+                          for k in ("busy", "vmem", "dram")}
+                   for name in self.simd_ids}
         for vi, vm in enumerate(vmems):
             table = get_simd_table(self.hw.replace(vmem=vm * KB),
                                    self._simd_union)
@@ -634,11 +947,15 @@ class _GridEngine:
             for name, ids in self.simd_ids.items():
                 if ids:
                     mats[name][vi] = net_cycles(ids)
+                    e = efields[name]
+                    e["busy"][vi] = table.busy[ids].sum()
+                    e["vmem"][vi] = table.sram_vmem[ids].sum()
+                    e["dram"][vi] = table.dram[ids].sum()
                 pis = self.simd_phase_ids[name]
                 if len(pis) > 1:
                     for ph, pi in pis.items():
                         pmats[name][ph][vi] = net_cycles(pi)
-        return mats, pmats
+        return mats, pmats, efields
 
 
 # ---------------------------------------------------------------------------
@@ -663,8 +980,9 @@ SEARCH_METHODS: Dict[str, object] = {}
 def register_search_method(name: str, fn) -> None:
     """Register a search front-end under ``method=name``.  ``fn`` is
     called as ``fn(hw_base, nets, size_budget_kb, bw_budget, sizes=...,
-    bws=..., tol=..., lower_bound=..., refine=...)`` and must return a
-    ``{name: DSEResult}`` mapping."""
+    bws=..., tol=..., lower_bound=..., refine=..., objective=...,
+    em=..., workers=...)`` and must return a ``{name: DSEResult}``
+    mapping whose results are scored in the given ``Objective``."""
     SEARCH_METHODS[name] = fn
 
 
@@ -673,10 +991,13 @@ def _grid_search_many(hw_base: HardwareSpec,
                       size_budget_kb: int, bw_budget: int, *,
                       sizes: Sequence[int], bws: Sequence[int],
                       tol: float, lower_bound: bool,
-                      refine=None) -> Dict[str, DSEResult]:
+                      refine=None, objective: Optional[Objective] = None,
+                      em: EnergyModel = DEFAULT_ENERGY,
+                      workers: int = 0) -> Dict[str, DSEResult]:
     """The tensorized exhaustive front-end (``method="grid"``)."""
     if refine is not None:
         raise ValueError("refine config only applies to method='refine'")
+    obj = resolve_objective(objective)
     lo_s = size_budget_kb * (1 - tol) if lower_bound else 0
     lo_b = bw_budget * (1 - tol) if lower_bound else 0
     size_tuples = _tuples(sizes, 4, lo_s, size_budget_kb * (1 + tol))
@@ -690,27 +1011,69 @@ def _grid_search_many(hw_base: HardwareSpec,
     ws, w_of = _project(bw_tuples, lambda t: t[3])
 
     eng = _GridEngine(hw_base, nets)
-    conv_mats, conv_pmats = eng.conv_matrices(s3s, b3s)
-    simd_mats, simd_pmats = eng.simd_matrices(vs, ws)
+    conv_mats, conv_pmats, conv_e = eng.conv_matrices(s3s, b3s,
+                                                      workers=workers)
+    simd_mats, simd_pmats, simd_e = eng.simd_matrices(vs, ws)
+    sizes_arr = np.array(size_tuples, dtype=np.int64)
 
     out: Dict[str, DSEResult] = {}
     for name in nets:
         costs = (conv_mats[name][np.ix_(s3_of, b3_of)]
                  + simd_mats[name][np.ix_(v_of, w_of)])
         grid = DSEGrid(costs, size_tuples, bw_tuples)
-        flat = costs.ravel()
-        # argmin/argmax return the first occurrence, matching the legacy
-        # strict-inequality update order (size-outer, bandwidth-inner).
-        best = grid.point(int(flat.argmin()))
-        worst = grid.point(int(flat.argmax()))
+        energy = _EnergyFields(hw=hw_base, em=em, conv=conv_e[name],
+                               simd=simd_e[name], s3_of=s3_of, v_of=v_of,
+                               sizes_kb=sizes_arr)
+        if type(obj) is Cycles:
+            # Legacy fast path: the score IS the int64 cycle count.
+            # (Exact-type check: a custom objective registered under the
+            # "cycles" name still gets its score() called below.)
+            flat = costs.ravel()
+            scores = None
+            # argmin/argmax return the first occurrence, matching the
+            # legacy strict-inequality update order (size-outer,
+            # bandwidth-inner).
+            best = grid.point(int(flat.argmin()))
+            worst = grid.point(int(flat.argmax()))
+        else:
+            mb = MetricBatch(costs, lambda e=energy, c=costs: e.grids(c))
+            scores = np.asarray(obj.score(mb), dtype=float)
+            flat = scores.ravel()
+            feasible = np.isfinite(flat)
+            if not feasible.any():
+                raise ValueError(
+                    f"objective {obj.name!r} marks every candidate "
+                    f"infeasible for network {name!r}")
+            best = grid.point(int(flat.argmin()))
+            worst = grid.point(int(np.where(feasible, flat, -np.inf)
+                                   .argmax()))
         phases = _PhaseGrids(conv=conv_pmats[name], simd=simd_pmats[name],
                              s3_of=s3_of, b3_of=b3_of, v_of=v_of, w_of=w_of)
         out[name] = DSEResult(best=best, worst=worst, grid=grid,
-                              phase_grids=phases)
+                              phase_grids=phases, objective=obj.name,
+                              grid_scores=scores, _energy=energy,
+                              # reuse the report the scoring pass already
+                              # computed (None for pure-cycles scores)
+                              _energy_grids=None if scores is None
+                              else mb._report)
     return out
 
 
 register_search_method("grid", _grid_search_many)
+
+
+def _deprecated_search_study(hw_base: HardwareSpec,
+                             sizes: Sequence[int], bws: Sequence[int],
+                             tol: float, lower_bound: bool):
+    import warnings
+    warnings.warn(
+        "search()/search_many() are deprecated; build a "
+        "repro.core.study.Study and call study.search(Workload(...), ...) "
+        "— same results, plus objectives (energy/EDP/power caps) and "
+        "parallel table builds", DeprecationWarning, stacklevel=3)
+    from .study import Study
+    return Study(hw_base, sizes=sizes, bws=bws, tol=tol,
+                 lower_bound=lower_bound)
 
 
 def search_many(hw_base: HardwareSpec, nets: Mapping[str, Sequence[Layer]],
@@ -719,38 +1082,23 @@ def search_many(hw_base: HardwareSpec, nets: Mapping[str, Sequence[Layer]],
                 tol: float = 0.15, lower_bound: bool = True,
                 training: bool = False, method: str = "grid",
                 refine=None) -> Dict[str, DSEResult]:
-    """DSE over several networks at once, sharing the per-size cost tables
-    (Table IX style sweeps build every table once).
+    """Deprecated: the legacy multi-network entry point, now a thin shim
+    over ``repro.core.study.Study`` (which adds first-class ``Workload``
+    and ``Objective`` axes — energy, EDP, power caps — on the same
+    engines).  Results are bit-identical to the ``Study`` path with the
+    default cycles objective; see that module for the new API.
 
     ``training=True`` expands each network through the Table I training
-    graph (forward + backward + updates) once up front; the expanded
-    layers then flow through the same shape-dedup (a dX conv that is
-    shape-identical to a forward conv shares its table column) and every
-    candidate's cost stays attributable to conv fwd/dX/dW and SIMD
-    fwd/bwd.
-
-    ``method`` selects the search front-end: ``"grid"`` (default) is the
-    tensorized exhaustive sweep, ``"refine"`` the budget-constrained
-    local search of ``core.optimize`` (pass a ``RefineConfig`` as
-    ``refine`` to control seed/starts/granularity).
-
-    ``lower_bound=False`` drops the lower budget bound (used for the
-    Fig. 11 / Table X economic-design landscape, where points far below
-    budget are of interest).
-    """
-    if training:
-        nets = {name: expand_training_graph(list(net))
-                for name, net in nets.items()}
-    fn = SEARCH_METHODS.get(method)
-    if fn is None and method == "refine":
-        from . import optimize                    # registers itself
-        del optimize
-        fn = SEARCH_METHODS.get(method)
-    if fn is None:
-        raise ValueError(f"unknown search method {method!r}; "
-                         f"registered: {sorted(SEARCH_METHODS)}")
-    return fn(hw_base, nets, size_budget_kb, bw_budget, sizes=sizes,
-              bws=bws, tol=tol, lower_bound=lower_bound, refine=refine)
+    graph; ``method`` selects the front-end (``"grid"`` exhaustive,
+    ``"refine"`` local search, with ``refine=RefineConfig(...)``);
+    ``lower_bound=False`` drops the lower budget bound (Fig. 11 /
+    Table X landscapes)."""
+    from .study import Workload
+    study = _deprecated_search_study(hw_base, sizes, bws, tol, lower_bound)
+    return study.search_many(
+        {name: Workload(net=tuple(net), training=training)
+         for name, net in nets.items()},
+        size_budget_kb, bw_budget, method=method, refine=refine)
 
 
 def search(hw_base: HardwareSpec, net: Sequence[Layer],
@@ -759,14 +1107,16 @@ def search(hw_base: HardwareSpec, net: Sequence[Layer],
            tol: float = 0.15, lower_bound: bool = True,
            training: bool = False, method: str = "grid",
            refine=None) -> DSEResult:
-    """DSE for a single network; see ``search_many`` for the parameters.
-    The full grid is kept as an array (``result.grid``) by the grid
-    front-end, the evaluation archive by refine; ``result.points``
-    materializes only the within-15% frontier either way."""
-    return search_many(hw_base, {"net": net}, size_budget_kb, bw_budget,
-                       sizes=sizes, bws=bws, tol=tol,
-                       lower_bound=lower_bound, training=training,
-                       method=method, refine=refine)["net"]
+    """Deprecated: single-network shim over ``Study``; see
+    ``search_many``.  The full grid is kept as an array (``result.grid``)
+    by the grid front-end, the evaluation archive by refine;
+    ``result.points`` materializes only the within-15% frontier either
+    way."""
+    from .study import Workload
+    study = _deprecated_search_study(hw_base, sizes, bws, tol, lower_bound)
+    return study.search(Workload(net=tuple(net), training=training),
+                        size_budget_kb, bw_budget,
+                        method=method, refine=refine)
 
 
 def phase_profile(hw: HardwareSpec, net: Sequence[Layer],

@@ -22,11 +22,15 @@ which are insensitive to uniform constant scaling.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Mapping, Union
+
+import numpy as np
 
 from .hardware import HardwareSpec
 
 PJ = 1e-12
+
+ArrayLike = Union[int, float, np.ndarray]
 
 
 @dataclass(frozen=True)
@@ -38,8 +42,13 @@ class EnergyModel:
     alu_dyn_w: float = 0.6e-3
     leak_frac: float = 0.08
 
-    def e_sram_pj_per_bit(self, size_bytes: int) -> float:
-        kb = max(1.0, size_bytes / 1024.0)
+    def e_sram_pj_per_bit(self, size_bytes: ArrayLike) -> ArrayLike:
+        """Per-bit SRAM access energy; accepts a scalar size in bytes or an
+        ndarray of sizes (one per design-space candidate)."""
+        if np.ndim(size_bytes) == 0:
+            kb = max(1.0, size_bytes / 1024.0)
+            return 0.035 * (kb / 32.0) ** 0.25
+        kb = np.maximum(1.0, np.asarray(size_bytes, dtype=float) / 1024.0)
         return 0.035 * (kb / 32.0) ** 0.25
 
     def p_sa_dyn(self, hw: HardwareSpec) -> float:
@@ -81,4 +90,56 @@ def compute_energy(hw: HardwareSpec,
         "E_total": e_total,
         "runtime_s": runtime_s,
         "P_avg": (e_total / runtime_s) if runtime_s > 0 else 0.0,
+    }
+
+
+# Canonical buffer order of the batched SRAM-energy sum.  It matches the
+# insertion order of ``NetworkReport.sram_bits_by_buffer()`` on conv-first
+# networks (all paper workloads), so the sequential accumulation below adds
+# the same terms in the same order as the scalar ``compute_energy`` —
+# float-identical, not merely close.
+SRAM_BUFFER_ORDER = ("wbuf", "ibuf", "obuf", "bbuf", "vmem")
+
+
+def compute_energy_batch(hw: HardwareSpec, *,
+                         c_sa: ArrayLike, c_simd: ArrayLike,
+                         l_total: ArrayLike,
+                         sram_bits: Mapping[str, ArrayLike],
+                         sram_sizes: Mapping[str, ArrayLike],
+                         dram_bits: ArrayLike,
+                         em: EnergyModel = DEFAULT_ENERGY
+                         ) -> Dict[str, np.ndarray]:
+    """Vectorized ``compute_energy``: every input may be an ndarray of
+    per-candidate values (broadcast against each other), and — unlike the
+    scalar path, where one ``hw`` fixes every buffer size — ``sram_sizes``
+    carries a per-candidate size array for each buffer, so one call prices
+    an entire design-space grid.  Term structure and accumulation order
+    mirror the scalar function exactly (Eqs. 29-32)."""
+    e_sa = (c_sa * em.p_sa_dyn(hw) + l_total * em.p_sa_leak(hw)) * em.t_clk_s
+    e_simd = (c_simd * em.p_simd_dyn(hw)
+              + l_total * em.p_simd_leak(hw)) * em.t_clk_s
+
+    e_s = 0.0
+    for buf in SRAM_BUFFER_ORDER:
+        if buf in sram_bits:
+            e_s = e_s + (sram_bits[buf]
+                         * em.e_sram_pj_per_bit(sram_sizes[buf]) * PJ)
+    for buf in sram_bits:            # non-canonical buffers, if any
+        if buf not in SRAM_BUFFER_ORDER:
+            e_s = e_s + (sram_bits[buf]
+                         * em.e_sram_pj_per_bit(sram_sizes[buf]) * PJ)
+    e_d = dram_bits * em.e_dram_pj_per_bit * PJ
+
+    e_total = e_sa + e_simd + e_s + e_d
+    runtime_s = np.asarray(l_total, dtype=float) * em.t_clk_s
+    with np.errstate(divide="ignore", invalid="ignore"):
+        p_avg = np.where(runtime_s > 0, e_total / runtime_s, 0.0)
+    return {
+        "E_SA": np.asarray(e_sa, dtype=float),
+        "E_SIMD": np.asarray(e_simd, dtype=float),
+        "E_S": np.asarray(e_s + np.zeros_like(runtime_s), dtype=float),
+        "E_D": np.asarray(e_d + np.zeros_like(runtime_s), dtype=float),
+        "E_total": np.asarray(e_total, dtype=float),
+        "runtime_s": runtime_s,
+        "P_avg": p_avg,
     }

@@ -43,8 +43,11 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from .dse import (DSEPoint, DSEResult, _GridEngine, get_conv_table,
-                  get_simd_table, _tuples, register_search_method)
+                  get_simd_table, prefetch_conv_tables, _tuples,
+                  register_search_method)
+from .energy import DEFAULT_ENERGY, EnergyModel, compute_energy_batch
 from .hardware import KB, HardwareSpec
+from .objectives import Cycles, MetricBatch, Objective, resolve_objective
 
 Tup = Tuple[int, int, int, int]
 Cand = Tuple[Tup, Tup]                     # (sizes_kb, bws)
@@ -94,16 +97,32 @@ class _RefineEvaluator:
     union-of-shapes tables, memoizing the two separable projections —
     conv cost at (size triple, bw triple), SIMD cost at (vmem, bw_v) —
     per network, so a revisited projection is a dict lookup and a
-    revisited size triple is a table-cache hit."""
+    revisited size triple is a table-cache hit.
+
+    Alongside cycles it memoizes the bandwidth-independent *energy*
+    components each projection contributes — busy cycles, SRAM bits per
+    buffer, DRAM bits, straight off the tables' energy tensors — so the
+    descent can score candidates in any ``Objective`` (``scores``) and
+    any archived point can be priced after the fact (``energy_at``)."""
 
     def __init__(self, hw_base: HardwareSpec,
-                 nets: Mapping[str, Sequence[object]]):
+                 nets: Mapping[str, Sequence[object]],
+                 objective: Optional[Objective] = None,
+                 em: EnergyModel = DEFAULT_ENERGY,
+                 workers: int = 0):
         self.hw = hw_base
+        self.obj = resolve_objective(objective)
+        self.em = em
+        self.workers = workers
         self.eng = _GridEngine(hw_base, nets)
         self._conv: Dict[str, Dict[tuple, int]] = {n: {} for n in nets}
         self._simd: Dict[str, Dict[tuple, int]] = {n: {} for n in nets}
+        # s3 -> (busy, wbuf, ibuf, obuf, bbuf, dram); vm -> (busy, vmem, dram)
+        self._conv_e: Dict[str, Dict[tuple, tuple]] = {n: {} for n in nets}
+        self._simd_e: Dict[str, Dict[int, tuple]] = {n: {} for n in nets}
         self._seen: Dict[str, set] = {n: set() for n in nets}
         self.archive: Dict[str, List[DSEPoint]] = {n: [] for n in nets}
+        self.archive_scores: Dict[str, List[float]] = {n: [] for n in nets}
         self._s3_seen: Dict[str, set] = {n: set() for n in nets}
         self._vm_seen: Dict[str, set] = {n: set() for n in nets}
 
@@ -134,7 +153,13 @@ class _RefineEvaluator:
 
     def _conv_fill(self, name: str, need: Dict[tuple, List[tuple]]) -> None:
         memo = self._conv[name]
+        e_memo = self._conv_e[name]
         cols = self.eng.conv_cols[name]
+        if self.workers > 1:
+            prefetch_conv_tables(
+                [self.hw.replace(wbuf=s3[0] * KB, ibuf=s3[1] * KB,
+                                 obuf=s3[2] * KB) for s3 in need],
+                self.eng._conv_union, self.workers)
         for s3, b3s in need.items():
             self._s3_seen[name].add(s3)
             hw = self.hw.replace(wbuf=s3[0] * KB, ibuf=s3[1] * KB,
@@ -145,13 +170,22 @@ class _RefineEvaluator:
                     [b[0] for b in b3s], [b[1] for b in b3s],
                     [b[2] for b in b3s])
                 vals = per_layer[:, cols].sum(axis=1).astype(np.int64)
+                if s3 not in e_memo:
+                    e_memo[s3] = (int(table.busy[cols].sum()),
+                                  int(table.sram["wbuf"][cols].sum()),
+                                  int(table.sram["ibuf"][cols].sum()),
+                                  int(table.sram["obuf"][cols].sum()),
+                                  int(table.sram["bbuf"][cols].sum()),
+                                  int(table.dram[cols].sum()))
             else:
                 vals = np.zeros(len(b3s), dtype=np.int64)
+                e_memo.setdefault(s3, (0, 0, 0, 0, 0, 0))
             for b3, v in zip(b3s, vals):
                 memo[(s3, b3)] = int(v)
 
     def _simd_fill(self, name: str, need: Dict[int, List[int]]) -> None:
         memo = self._simd[name]
+        e_memo = self._simd_e[name]
         ids = self.eng.simd_ids[name]
         for vm, wvs in need.items():
             self._vm_seen[name].add(vm)
@@ -163,14 +197,65 @@ class _RefineEvaluator:
                 stall = table.row_stall_batch(wvs)
                 vals = (compute + stall[:, rows].sum(axis=1)) \
                     .astype(np.int64)
+                if vm not in e_memo:
+                    e_memo[vm] = (int(table.busy[ids].sum()),
+                                  int(table.sram_vmem[ids].sum()),
+                                  int(table.dram[ids].sum()))
             else:
                 vals = np.zeros(len(wvs), dtype=np.int64)
+                e_memo.setdefault(vm, (0, 0, 0))
             for w, v in zip(wvs, vals):
                 memo[(vm, w)] = int(v)
 
+    def _energy_batch(self, name: str, cands: Sequence[Cand],
+                      cycles: np.ndarray) -> Dict[str, np.ndarray]:
+        """Vectorized Sec. VI energy report for already-memoized
+        candidates, assembled from the per-projection energy components."""
+        ce, se = self._conv_e[name], self._simd_e[name]
+        try:
+            conv = np.array([ce[sz[:3]] for sz, _ in cands], dtype=np.int64)
+            simd = np.array([se[sz[3]] for sz, _ in cands], dtype=np.int64)
+        except KeyError:
+            missing = [sz for sz, _ in cands
+                       if sz[:3] not in ce or sz[3] not in se]
+            raise ValueError(
+                f"point(s) with sizes {missing} were never evaluated by "
+                f"this refine run; energy is only available for archived "
+                f"candidates") from None
+        sizes = np.array([sz for sz, _ in cands], dtype=np.int64)
+        return compute_energy_batch(
+            self.hw, em=self.em,
+            c_sa=conv[:, 0], c_simd=simd[:, 0], l_total=cycles,
+            sram_bits={"wbuf": conv[:, 1], "ibuf": conv[:, 2],
+                       "obuf": conv[:, 3], "bbuf": conv[:, 4],
+                       "vmem": simd[:, 1]},
+            sram_sizes={"wbuf": sizes[:, 0] * KB, "ibuf": sizes[:, 1] * KB,
+                        "obuf": sizes[:, 2] * KB, "bbuf": self.hw.bbuf,
+                        "vmem": sizes[:, 3] * KB},
+            dram_bits=conv[:, 5] + simd[:, 2])
+
+    def energy_at(self, name: str, point: DSEPoint) -> Dict[str, float]:
+        """Energy report of one evaluated point (components are memoized
+        by construction for every archived candidate)."""
+        cand = (point.sizes_kb, point.bws)
+        rep = self._energy_batch(name, [cand],
+                                 np.array([point.cycles], dtype=np.int64))
+        return {k: float(v[0]) for k, v in rep.items()}
+
+    def energy_many(self, name: str,
+                    points: Sequence[DSEPoint]) -> np.ndarray:
+        """E_total for many evaluated points in one vectorized call (the
+        Pareto path over the whole archive)."""
+        cands = [(p.sizes_kb, p.bws) for p in points]
+        cycles = np.array([p.cycles for p in points], dtype=np.int64)
+        return self._energy_batch(name, cands, cycles)["E_total"]
+
     def evaluate(self, name: str, cands: Sequence[Cand]) -> np.ndarray:
-        """int64 cycles for each candidate; one batched reduction per
-        unique size triple / VMem value not already memoized."""
+        """Objective scores for each candidate (int64 cycles under the
+        default cycles objective); one batched reduction per unique size
+        triple / VMem value not already memoized.  Every newly seen
+        candidate is archived (with its true cycle count) along with its
+        score."""
         conv_memo, simd_memo = self._conv[name], self._simd[name]
         need_c: Dict[tuple, List[tuple]] = {}
         need_s: Dict[int, List[int]] = {}
@@ -189,15 +274,30 @@ class _RefineEvaluator:
             self._conv_fill(name, need_c)
         if need_s:
             self._simd_fill(name, need_s)
-        seen, arch = self._seen[name], self.archive[name]
-        out = np.empty(len(cands), dtype=np.int64)
+        cycles = np.empty(len(cands), dtype=np.int64)
         for i, (sz, bw) in enumerate(cands):
-            c = conv_memo[(sz[:3], bw[:3])] + simd_memo[(sz[3], bw[3])]
-            out[i] = c
+            cycles[i] = conv_memo[(sz[:3], bw[:3])] \
+                + simd_memo[(sz[3], bw[3])]
+        if type(self.obj) is Cycles:   # exact type: custom "cycles"-named
+            scores = cycles            # objectives still score() below
+        else:
+            mb = MetricBatch(cycles,
+                             lambda: self._energy_batch(name, cands, cycles))
+            scores = np.asarray(self.obj.score(mb), dtype=float)
+        seen = self._seen[name]
+        arch, arch_scores = self.archive[name], self.archive_scores[name]
+        for i, (sz, bw) in enumerate(cands):
             if (sz, bw) not in seen:
                 seen.add((sz, bw))
-                arch.append(DSEPoint(sz, bw, c))
-        return out
+                arch.append(DSEPoint(sz, bw, int(cycles[i])))
+                arch_scores.append(scores[i].item())
+        return scores
+
+    def cycles_of(self, name: str, cand: Cand) -> int:
+        """True cycle count of an already-memoized candidate."""
+        sz, bw = cand
+        return (self._conv[name][(sz[:3], bw[:3])]
+                + self._simd[name][(sz[3], bw[3])])
 
     def phase_cycles(self, name: str, point: DSEPoint) -> Dict[str, int]:
         """Phase-resolved cycles of any (sizes, bws) point — the same
@@ -396,14 +496,19 @@ def refine_search_many(hw_base: HardwareSpec,
                        size_budget_kb: int, bw_budget: int, *,
                        sizes: Sequence[int], bws: Sequence[int],
                        tol: float, lower_bound: bool,
-                       refine: Optional[RefineConfig] = None
-                       ) -> Dict[str, DSEResult]:
+                       refine: Optional[RefineConfig] = None,
+                       objective: Optional[Objective] = None,
+                       em: EnergyModel = DEFAULT_ENERGY,
+                       workers: int = 0) -> Dict[str, DSEResult]:
     """The ``method="refine"`` front-end (see module docstring).
 
     Networks are optimized independently but share the union cost tables
     and the process-lifetime table cache, exactly like the grid engine —
     so a refine run after (or before) a grid sweep of the same shapes
-    rebuilds nothing at the lattice level."""
+    rebuilds nothing at the lattice level.  The descent accepts moves on
+    the ``objective``'s score (cycles by default; energy/EDP/power-capped
+    searches run the identical search dynamics over their own
+    landscape)."""
     cfg = refine if refine is not None else RefineConfig()
     sizes = sorted(int(s) for s in sizes)
     bws = sorted(int(b) for b in bws)
@@ -421,7 +526,8 @@ def refine_search_many(hw_base: HardwareSpec,
     max_evals = cfg.max_evals if cfg.max_evals is not None \
         else max(600, n_grid // 12)
 
-    ev = _RefineEvaluator(hw_base, nets)
+    ev = _RefineEvaluator(hw_base, nets, objective=objective, em=em,
+                          workers=workers)
     out: Dict[str, DSEResult] = {}
     for name in nets:
         out[name] = _refine_one(ev, name, cfg, sizes, bws,
@@ -463,8 +569,9 @@ def _refine_one(ev: _RefineEvaluator, name: str, cfg: RefineConfig,
         if ev.n_evals(name) >= max_evals:
             break
         cur = start
-        cur_cost = int(ev.evaluate(name, [cur])[0])
-        trajectory.append((si, 0, DSEPoint(cur[0], cur[1], cur_cost)))
+        cur_score = ev.evaluate(name, [cur])[0].item()
+        trajectory.append(
+            (si, 0, DSEPoint(cur[0], cur[1], ev.cycles_of(name, cur))))
         level = 0                     # 0 = lattice, k>=1 = steps[k-1]
         moves = 0
         while moves < cfg.max_steps:
@@ -482,20 +589,21 @@ def _refine_one(ev: _RefineEvaluator, name: str, cfg: RefineConfig,
             room = max_evals - ev.n_evals(name)
             if cands and room > 0:
                 cands = ev.filter_budget(name, cands, room)
-                costs = ev.evaluate(name, cands)
-                i = int(costs.argmin())          # first occurrence: the
-                cand, cost = cands[i], int(costs[i])   # order-earliest min
+                scores = ev.evaluate(name, cands)
+                i = int(scores.argmin())         # first occurrence: the
+                cand, score = cands[i], scores[i].item()  # order-earliest min
             else:
-                cand, cost = None, None
-            # accept strictly better cycles, or equal cycles at a point
+                cand, score = None, None
+            # accept a strictly better score, or an equal score at a point
             # earlier in (sizes, bws) tuple order — the legacy grid
             # iteration order for ascending lattices; the monotone
             # decrease also guarantees termination
-            if cand is not None and (cost, cand) < (cur_cost, cur):
-                cur, cur_cost = cand, cost
+            if cand is not None and (score, cand) < (cur_score, cur):
+                cur, cur_score = cand, score
                 moves += 1
                 trajectory.append(
-                    (si, stride, DSEPoint(cur[0], cur[1], cur_cost)))
+                    (si, stride,
+                     DSEPoint(cur[0], cur[1], ev.cycles_of(name, cur))))
                 level = 0             # improvement: restart from coarse
             else:
                 level += 1            # stalled: refine the stride
@@ -503,8 +611,17 @@ def _refine_one(ev: _RefineEvaluator, name: str, cfg: RefineConfig,
                     break
 
     arch = ev.archive[name]
-    best_point = min(arch, key=lambda p: (p.cycles, p.sizes_kb, p.bws))
-    worst_point = max(arch, key=lambda p: (p.cycles, p.sizes_kb, p.bws))
+    arch_scores = ev.archive_scores[name]
+    is_cycles = type(ev.obj) is Cycles
+    scored = [(s, p) for s, p in zip(arch_scores, arch)
+              if s != float("inf")]
+    if not scored:
+        raise ValueError(f"objective {ev.obj.name!r} marks every evaluated "
+                         f"candidate infeasible for network {name!r}")
+    best_point = min(scored, key=lambda sp: (sp[0], sp[1].sizes_kb,
+                                             sp[1].bws))[1]
+    worst_point = max(scored, key=lambda sp: (sp[0], sp[1].sizes_kb,
+                                              sp[1].bws))[1]
     trace = RefineTrace(seed=cfg.seed, n_starts=len(starts),
                         n_evals=ev.n_evals(name),
                         n_size_triples=ev.n_size_triples(name),
@@ -513,7 +630,11 @@ def _refine_one(ev: _RefineEvaluator, name: str, cfg: RefineConfig,
                         trajectory=tuple(trajectory))
     return DSEResult(best=best_point, worst=worst_point,
                      refine=trace, archive=list(arch),
-                     _phase_at=lambda p, _n=name: ev.phase_cycles(_n, p))
+                     objective=ev.obj.name,
+                     archive_scores=None if is_cycles else list(arch_scores),
+                     _phase_at=lambda p, _n=name: ev.phase_cycles(_n, p),
+                     _energy_at=lambda p, _n=name: ev.energy_at(_n, p),
+                     _energy_many=lambda ps, _n=name: ev.energy_many(_n, ps))
 
 
 register_search_method("refine", refine_search_many)

@@ -154,16 +154,22 @@ class NetworkReport:
             raise ValueError(metric)
         return sub / tot if tot else 0.0
 
-    def energy(self, hw: HardwareSpec,
-               em: EnergyModel = DEFAULT_ENERGY) -> Dict[str, float]:
-        return compute_energy(
-            hw,
+    def energy_inputs(self) -> Dict[str, object]:
+        """The exact per-network quantities ``energy()`` hands to
+        ``compute_energy`` — busy cycles per engine, total cycles, SRAM
+        bits by buffer, DRAM bits.  The DSE cost tables carry the same
+        five quantities per candidate; exposing them here is what lets
+        the batched energy tensors be validated against the simulator."""
+        return dict(
             c_sa=self.compute_cycles_sa,
             c_simd=self.compute_cycles_simd,
             l_total=self.total_cycles,
             sram_bits=self.sram_bits_by_buffer(),
-            dram_bits=self.dram_bits(),
-            em=em)
+            dram_bits=self.dram_bits())
+
+    def energy(self, hw: HardwareSpec,
+               em: EnergyModel = DEFAULT_ENERGY) -> Dict[str, float]:
+        return compute_energy(hw, em=em, **self.energy_inputs())
 
     def nonconv_energy_fraction(self, hw: HardwareSpec,
                                 em: EnergyModel = DEFAULT_ENERGY) -> float:

@@ -1,0 +1,217 @@
+"""Objective-first DSE front door: ``Workload`` / ``Objective`` / ``Study``.
+
+The paper's deliverable is *end-to-end* statistics — cycles, access
+counts, energy, power (Secs. IV-VI) — and its design-space study
+(Sec. VII-B) asks allocation questions against them.  This module makes
+each axis of such a study a first-class value:
+
+  * ``Workload`` — what runs: a network (by registry name or as a layer
+    list), inference or training (Table I expansion), at a batch size.
+    Replaces the ad-hoc ``training=True`` kwarg + bare layer sequences.
+  * ``Objective`` — what is minimized: a batched reduction over the cost
+    tables (``repro.core.objectives``).  Ship: ``cycles``, ``energy``,
+    ``edp``, ``CyclesUnderPowerCap(cap_w=...)``.
+  * ``Study`` — where the search runs: owns the hardware base, the
+    candidate space (lattices, budget tolerance), the energy model, the
+    worker pool for parallel table builds, and the front-end registry
+    (``method="grid"`` exhaustive / ``method="refine"`` local search).
+
+One study amortizes everything shareable: all its searches draw from the
+process-lifetime ``ConvTable``/``SimdTable`` caches, and because the
+tables carry the energy tensors alongside cycles, a cycles sweep
+followed by an energy (or EDP, or power-capped) sweep over the same
+budgets rebuilds *nothing* (``Study.cache_stats``).
+
+    study = Study(HI3, workers=4)
+    wl = Workload("resnet50")                       # inference, batch 1
+    res = study.search(wl, 2048, 2048, objective="edp")
+    res.best, res.energy_report(), res.pareto()     # 2-D cycles/energy
+
+The legacy ``repro.core.dse.search``/``search_many`` survive as thin
+deprecation shims over a default ``Study``, bit-identical under the
+default cycles objective.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+from .backward import expand_training_graph
+from .dse import (BWS, SEARCH_METHODS, SIZES_KB, DSEResult, Layer,
+                  clear_table_caches, table_cache_stats)
+from .energy import DEFAULT_ENERGY, EnergyModel
+from .hardware import HardwareSpec
+from .layers import ConvLayer, SimdLayer
+from .objectives import Objective, resolve_objective
+
+WORKERS_ENV = "REPRO_DSE_WORKERS"
+
+
+def default_workers() -> int:
+    """Worker-process default for parallel table builds: the
+    ``REPRO_DSE_WORKERS`` environment variable, else 0 (serial)."""
+    try:
+        return max(0, int(os.environ.get(WORKERS_ENV, "0")))
+    except ValueError:
+        return 0
+
+
+@dataclass(frozen=True)
+class Workload:
+    """What runs on the accelerator: a network, a phase, a batch size.
+
+    ``net`` is either a name in ``repro.core.networks.NETWORKS`` or an
+    explicit layer sequence (stored as a tuple).  ``training=True``
+    selects the Table I training expansion (and, for named networks, the
+    BN-bearing graph); ``batch`` defaults to the paper's setup — 1 for
+    inference, 32 for training (Sec. VII-A) — and only applies to named
+    networks (an explicit layer list already fixes its batch)."""
+    net: Union[str, Tuple[Layer, ...]]
+    training: bool = False
+    batch: Optional[int] = None
+    name: Optional[str] = None
+
+    def __post_init__(self):
+        if not isinstance(self.net, (str, tuple)):
+            object.__setattr__(self, "net", tuple(self.net))
+        if not isinstance(self.net, str) and self.batch is not None:
+            raise ValueError("batch applies to named networks only; an "
+                             "explicit layer list already fixes its batch")
+
+    @property
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        base = self.net if isinstance(self.net, str) else "net"
+        return f"{base}:train" if self.training else base
+
+    def layers(self) -> List[Layer]:
+        """The concrete layer list, training-expanded when asked.  Named
+        networks follow ``simulate``'s conventions: BN layers appear only
+        in training graphs (inference graphs are BN-folded)."""
+        if isinstance(self.net, str):
+            from .networks import NETWORKS
+            batch = self.batch if self.batch is not None \
+                else (32 if self.training else 1)
+            net = NETWORKS[self.net](batch, bn=self.training)
+        else:
+            net = list(self.net)
+        return expand_training_graph(net) if self.training else net
+
+
+def as_workload(w: Union[Workload, str, Sequence[Layer]]) -> Workload:
+    """Coerce a workload spec: a ``Workload`` passes through, a string
+    names a registry network (inference), a layer sequence wraps as an
+    inference workload."""
+    if isinstance(w, Workload):
+        return w
+    if isinstance(w, str):
+        return Workload(net=w)
+    if isinstance(w, Sequence) and all(
+            isinstance(l, (ConvLayer, SimdLayer)) for l in w):
+        return Workload(net=tuple(w))
+    raise TypeError(f"cannot interpret {w!r} as a Workload")
+
+
+class Study:
+    """One design-space study: hardware base + candidate space + caches.
+
+    Every ``search``/``search_many`` call runs over this study's lattice
+    (``sizes`` x ``bws``, four coordinates each, filtered to the +-``tol``
+    budget band) with its energy model and worker pool; front-ends come
+    from its method registry (``"grid"`` and ``"refine"`` built in,
+    ``register_method`` for custom ones).  ``workers > 1`` fans the
+    per-size-triple ``ConvTable`` builds out across processes — results
+    stay bit-identical to serial — defaulting to ``$REPRO_DSE_WORKERS``.
+    """
+
+    def __init__(self, hw: HardwareSpec, *,
+                 sizes: Sequence[int] = SIZES_KB,
+                 bws: Sequence[int] = BWS,
+                 tol: float = 0.15, lower_bound: bool = True,
+                 energy_model: EnergyModel = DEFAULT_ENERGY,
+                 workers: Optional[int] = None,
+                 methods: Optional[Dict[str, object]] = None):
+        self.hw = hw
+        self.sizes = tuple(sizes)
+        self.bws = tuple(bws)
+        self.tol = tol
+        self.lower_bound = lower_bound
+        self.energy_model = energy_model
+        self.workers = default_workers() if workers is None else int(workers)
+        self._methods = methods
+
+    # ---- front-end registry ----------------------------------------------
+
+    def register_method(self, name: str, fn) -> None:
+        """Register a search front-end on this study only (the global
+        registry in ``repro.core.dse`` is untouched)."""
+        if self._methods is None:
+            self._methods = dict(SEARCH_METHODS)
+        self._methods[name] = fn
+
+    def _resolve_method(self, method: str):
+        registry = self._methods if self._methods is not None \
+            else SEARCH_METHODS
+        fn = registry.get(method)
+        if fn is None and method == "refine":
+            from . import optimize                    # registers itself
+            del optimize
+            fn = SEARCH_METHODS.get(method)
+            if self._methods is not None:
+                self._methods.setdefault(method, fn)
+        if fn is None:
+            raise ValueError(f"unknown search method {method!r}; "
+                             f"registered: {sorted(registry)}")
+        return fn
+
+    # ---- searching --------------------------------------------------------
+
+    def search_many(self,
+                    workloads: Mapping[str, Union[Workload, str,
+                                                  Sequence[Layer]]],
+                    size_budget_kb: int, bw_budget: int, *,
+                    objective: Union[str, Objective, None] = "cycles",
+                    method: str = "grid",
+                    refine=None) -> Dict[str, DSEResult]:
+        """Search several workloads at once, sharing the union-of-shapes
+        cost tables (a Table IX style sweep builds each table once).
+        Returns ``{key: DSEResult}`` scored in ``objective``."""
+        obj = resolve_objective(objective)
+        nets = {key: as_workload(w).layers()
+                for key, w in workloads.items()}
+        fn = self._resolve_method(method)
+        return fn(self.hw, nets, size_budget_kb, bw_budget,
+                  sizes=self.sizes, bws=self.bws, tol=self.tol,
+                  lower_bound=self.lower_bound, refine=refine,
+                  objective=obj, em=self.energy_model,
+                  workers=self.workers)
+
+    def search(self, workload: Union[Workload, str, Sequence[Layer]],
+               size_budget_kb: int, bw_budget: int, *,
+               objective: Union[str, Objective, None] = "cycles",
+               method: str = "grid", refine=None) -> DSEResult:
+        """Search one workload; see ``search_many``.
+
+        ``objective`` may be a registered name (``"cycles"``,
+        ``"energy"``, ``"edp"``) or an ``Objective`` instance (e.g.
+        ``CyclesUnderPowerCap(cap_w=30.0)``); ``method`` one of this
+        study's front-ends (``"grid"``/``"refine"``)."""
+        wl = as_workload(workload)
+        key = wl.label
+        return self.search_many({key: wl}, size_budget_kb, bw_budget,
+                                objective=objective, method=method,
+                                refine=refine)[key]
+
+    # ---- cache ownership --------------------------------------------------
+
+    @staticmethod
+    def cache_stats() -> Dict[str, object]:
+        """Counters of the shared table caches (``table_cache_stats``)."""
+        return table_cache_stats()
+
+    @staticmethod
+    def clear_caches() -> None:
+        """Drop the shared table caches (benchmark fairness)."""
+        clear_table_caches()

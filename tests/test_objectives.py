@@ -1,0 +1,207 @@
+"""Objective correctness: the batched energy/EDP/power reductions the DSE
+engines score candidates with must match ``compute_energy`` applied to the
+scalar simulator's outputs — for best, worst, and frontier points, grid and
+refine front-ends, inference and training workloads."""
+import numpy as np
+import pytest
+
+from repro.core import (EDP, Cycles, CyclesUnderPowerCap, Energy, Study,
+                        Workload, resolve_objective)
+from repro.core.backward import expand_training_graph
+from repro.core.energy import compute_energy, compute_energy_batch
+from repro.core.hardware import INFER_PRESETS, KB
+from repro.core.layers import (ConvLayer, batch_norm, fc, pool, relu,
+                               tensor_add)
+from repro.core.objectives import MetricBatch
+from repro.core.simulator import simulate_network
+
+HW = INFER_PRESETS[16]
+GRID = (32, 64, 128, 256)
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def tiny_net():
+    return [
+        _conv("c1"),
+        relu("r1", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32, has_bias=False),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        tensor_add("a1", 8, 8, 1, 32),
+        fc("fc", 1, 2048, 100),
+    ]
+
+
+def tiny_train_net():
+    return [
+        _conv("c1", has_bias=False),
+        batch_norm("c1.bn", 16, 16, 1, 32),
+        relu("c1.relu", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        tensor_add("a1", 8, 8, 1, 32),
+        fc("fc", 1, 2048, 10),
+    ]
+
+
+def _study():
+    return Study(HW, sizes=GRID, bws=GRID, tol=0.5)
+
+
+def _materialize(point):
+    """The HardwareSpec of one DSE candidate."""
+    return HW.replace(
+        wbuf=point.sizes_kb[0] * KB, ibuf=point.sizes_kb[1] * KB,
+        obuf=point.sizes_kb[2] * KB, vmem=point.sizes_kb[3] * KB,
+        bw_w=point.bws[0], bw_i=point.bws[1], bw_o=point.bws[2],
+        bw_v=point.bws[3])
+
+
+def _simulator_energy(net, training, point):
+    layers = expand_training_graph(list(net)) if training else list(net)
+    hw = _materialize(point)
+    rep = simulate_network(hw, layers)
+    return rep, rep.energy(hw)
+
+
+# ---------------------------------------------------------------------------
+# Batched energy == scalar compute_energy on simulator outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("training", [False, True])
+@pytest.mark.parametrize("method", ["grid", "refine"])
+def test_batched_energy_matches_simulator(training, method):
+    net = tiny_train_net() if training else tiny_net()
+    res = _study().search(Workload(net=tuple(net), training=training),
+                          256, 256, objective="energy", method=method)
+    sample = [res.best, res.worst] + res.points[::7]
+    for p in sample:
+        rep, want = _simulator_energy(net, training, p)
+        assert rep.total_cycles == p.cycles
+        got = res.energy_report(p)
+        for key in ("E_SA", "E_SIMD", "E_S", "E_D", "E_total",
+                    "runtime_s", "P_avg"):
+            assert np.isclose(got[key], want[key], rtol=1e-12), (key, p)
+        # the objective score IS the batched E_total
+        assert res.score_of(p) == got["E_total"]
+    assert res.best_score <= min(res.score_of(p) for p in sample)
+
+
+@pytest.mark.parametrize("training", [False, True])
+def test_batched_edp_matches_simulator(training):
+    net = tiny_train_net() if training else tiny_net()
+    res = _study().search(Workload(net=tuple(net), training=training),
+                          256, 256, objective="edp")
+    for p in [res.best, res.worst] + res.points[::7]:
+        _, want = _simulator_energy(net, training, p)
+        assert np.isclose(res.score_of(p),
+                          want["E_total"] * want["runtime_s"], rtol=1e-12)
+        assert np.isclose(res.edp_of(p),
+                          want["E_total"] * want["runtime_s"], rtol=1e-12)
+
+
+def test_cycles_result_prices_energy_lazily():
+    """Even a pure-cycles search can price any of its candidates (the
+    energy tensors ride along in the cached tables), and the numbers
+    match the simulator."""
+    net = tiny_net()
+    for method in ("grid", "refine"):
+        res = _study().search(Workload(net=tuple(net)), 256, 256,
+                              method=method)
+        assert res.objective == "cycles"
+        _, want = _simulator_energy(net, False, res.best)
+        assert np.isclose(res.energy_of(), want["E_total"], rtol=1e-12)
+        assert np.isclose(res.power_of(), want["P_avg"], rtol=1e-12)
+
+
+def test_energy_inputs_roundtrip():
+    """NetworkReport.energy_inputs feeds compute_energy exactly like
+    NetworkReport.energy does."""
+    rep = simulate_network(HW, tiny_net())
+    assert rep.energy(HW) == compute_energy(HW, **rep.energy_inputs())
+
+
+def test_compute_energy_batch_matches_scalar_elementwise():
+    """The vectorized energy model is the scalar one, broadcast."""
+    rng = np.random.default_rng(0)
+    n = 16
+    c_sa = rng.integers(1, 10**9, n)
+    c_simd = rng.integers(1, 10**8, n)
+    l_total = c_sa + c_simd + rng.integers(0, 10**8, n)
+    bits = {b: rng.integers(0, 10**12, n)
+            for b in ("wbuf", "ibuf", "obuf", "bbuf", "vmem")}
+    sizes = {b: rng.integers(1, 2048, n) * KB
+             for b in ("wbuf", "ibuf", "obuf", "vmem")}
+    sizes["bbuf"] = HW.bbuf
+    batch = compute_energy_batch(HW, c_sa=c_sa, c_simd=c_simd,
+                                 l_total=l_total, sram_bits=bits,
+                                 sram_sizes=sizes, dram_bits=bits["wbuf"])
+    for i in range(n):
+        hw = HW.replace(wbuf=int(sizes["wbuf"][i]),
+                        ibuf=int(sizes["ibuf"][i]),
+                        obuf=int(sizes["obuf"][i]),
+                        vmem=int(sizes["vmem"][i]))
+        want = compute_energy(hw, c_sa=int(c_sa[i]), c_simd=int(c_simd[i]),
+                              l_total=int(l_total[i]),
+                              sram_bits={b: int(v[i])
+                                         for b, v in bits.items()},
+                              dram_bits=int(bits["wbuf"][i]))
+        for key in ("E_SA", "E_SIMD", "E_S", "E_D", "E_total", "P_avg"):
+            assert np.isclose(float(batch[key][i]), want[key], rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Power-capped search
+# ---------------------------------------------------------------------------
+
+def test_cycles_under_power_cap():
+    net = tiny_net()
+    st = _study()
+    wl = Workload(net=tuple(net))
+    free = st.search(wl, 256, 256)                 # unconstrained cycles
+    # a loose cap (above the unconstrained optimum's power) changes nothing
+    loose = st.search(wl, 256, 256, objective=CyclesUnderPowerCap(
+        cap_w=free.power_of(free.best) * 2))
+    assert loose.best == free.best
+    # a binding cap: every qualifying point obeys it, and the constrained
+    # optimum cannot beat the unconstrained one
+    powers = [free.power_of(p) for p in free.points]
+    cap = min(powers) + 0.5 * (max(powers) - min(powers))
+    capped = st.search(wl, 256, 256,
+                       objective=CyclesUnderPowerCap(cap_w=cap))
+    assert capped.power_of(capped.best) <= cap
+    assert capped.best.cycles >= free.best.cycles
+    for p in capped.points:
+        assert capped.power_of(p) <= cap
+    # an impossible cap is an explicit error, not a silent empty result
+    with pytest.raises(ValueError, match="infeasible"):
+        st.search(wl, 256, 256, objective=CyclesUnderPowerCap(cap_w=1e-9))
+
+
+# ---------------------------------------------------------------------------
+# Objective protocol / registry
+# ---------------------------------------------------------------------------
+
+def test_resolve_objective():
+    assert isinstance(resolve_objective(None), Cycles)
+    assert isinstance(resolve_objective("cycles"), Cycles)
+    assert isinstance(resolve_objective("energy"), Energy)
+    assert isinstance(resolve_objective("edp"), EDP)
+    cap = CyclesUnderPowerCap(cap_w=30.0)
+    assert resolve_objective(cap) is cap
+    with pytest.raises(ValueError, match="unknown objective"):
+        resolve_objective("joules_per_furlong")
+    with pytest.raises(ValueError, match="cap"):
+        resolve_objective("cycles_under_power_cap")
+
+
+def test_metric_batch_requires_energy_fn():
+    mb = MetricBatch(np.array([1, 2, 3], dtype=np.int64))
+    assert (Cycles().score(mb) == [1, 2, 3]).all()
+    with pytest.raises(ValueError, match="needs_energy"):
+        Energy().score(mb)

@@ -1,0 +1,302 @@
+"""The objective-first Study/Workload API.
+
+Pins the redesign's contracts: the legacy ``search``/``search_many``
+shims warn and stay bit-identical to the ``Study`` path on the Table VIII
+fixtures; ``objective="energy"`` with ``method="refine"`` is never worse
+than the exhaustive power-of-two grid optimum on every Table VIII budget
+(inference and training — the energy mirror of the PR 3 cycles
+guarantee); the 2-D (cycles, energy) Pareto frontier contains both
+single-metric optima; parallel table builds are bit-identical to serial;
+and a cross-objective sweep rebuilds no tables."""
+import warnings
+
+import pytest
+
+from repro.core import INFER_PRESETS, TRAIN_PRESETS, Study, Workload
+from repro.core.backward import expand_training_graph
+from repro.core.dse import (clear_table_caches, search, search_many,
+                            table_cache_stats)
+from repro.core.layers import (ConvLayer, batch_norm, fc, pool, relu,
+                               tensor_add)
+from repro.core.networks import NETWORKS, resnet50
+from repro.core.study import as_workload, default_workers
+
+BUDGETS = {16: 512, 32: 1024, 64: 2048, 128: 4096}   # Table VIII
+HW16 = INFER_PRESETS[16]
+GRID = (32, 64, 128, 256)
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def tiny_net():
+    return [
+        _conv("c1"),
+        relu("r1", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32, has_bias=False),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        tensor_add("a1", 8, 8, 1, 32),
+        fc("fc", 1, 2048, 100),
+    ]
+
+
+def tiny_train_net():
+    return [
+        _conv("c1", has_bias=False),
+        batch_norm("c1.bn", 16, 16, 1, 32),
+        relu("c1.relu", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        tensor_add("a1", 8, 8, 1, 32),
+        fc("fc", 1, 2048, 10),
+    ]
+
+
+def _hw(presets, jk):
+    return presets.get(jk, presets[64]).replace(J=jk, K=jk)
+
+
+def _assert_same_result(a, b):
+    assert a.best == b.best
+    assert a.worst == b.worst
+    assert a.objective == b.objective
+    assert a.points == b.points
+    if a.refine is not None or b.refine is not None:
+        assert a.refine.trajectory == b.refine.trajectory
+        assert a.archive == b.archive
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: energy-objective refine never worse than the exhaustive
+# power-of-two grid optimum, every Table VIII budget, inference + training
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def table8_energy():
+    """Grid + refine energy results for every Table VIII budget,
+    ResNet-50 inference and training."""
+    out = {}
+    for mode, presets, training in (("inference", INFER_PRESETS, False),
+                                    ("training", TRAIN_PRESETS, True)):
+        wl = Workload("resnet50", training=training)
+        for jk, budget in BUDGETS.items():
+            study = Study(_hw(presets, jk))
+            g = study.search(wl, budget, budget, objective="energy")
+            r = study.search(wl, budget, budget, objective="energy",
+                             method="refine")
+            out[(mode, jk)] = (budget, g, r)
+    return out
+
+
+@pytest.mark.parametrize("mode", ["inference", "training"])
+@pytest.mark.parametrize("jk", [16, 32, 64, 128])
+def test_energy_refine_never_worse_than_grid(table8_energy, mode, jk):
+    budget, g, r = table8_energy[(mode, jk)]
+    assert r.objective == g.objective == "energy"
+    assert r.best_score <= g.best_score
+    assert r.refine.eval_saving >= 10.0
+    lo, hi = budget * 0.85, budget * 1.15
+    assert lo <= r.best.total_size_kb <= hi
+    assert lo <= r.best.total_bw <= hi
+
+
+def test_energy_refine_beats_lattice_somewhere(table8_energy):
+    """The off-lattice granularity must pay for energy too."""
+    assert any(r.best_score < g.best_score
+               for _, g, r in table8_energy.values())
+
+
+def test_energy_optimum_differs_from_cycles_optimum(table8_energy):
+    """The new metric axis is not a relabeling: on at least one Table VIII
+    fixture the min-energy allocation is a different configuration than
+    the min-cycles one (SRAM access cost pulls toward smaller buffers)."""
+    diffs = 0
+    for (mode, jk), (budget, g, _) in table8_energy.items():
+        presets = INFER_PRESETS if mode == "inference" else TRAIN_PRESETS
+        wl = Workload("resnet50", training=(mode == "training"))
+        c = Study(_hw(presets, jk)).search(wl, budget, budget)
+        assert g.best.cycles >= c.best.cycles   # cycles at min-energy point
+        assert c.energy_of(c.best) >= g.best_score
+        if (g.best.sizes_kb, g.best.bws) != (c.best.sizes_kb, c.best.bws):
+            diffs += 1
+    assert diffs > 0
+
+
+def test_pareto_contains_both_optima(table8_energy):
+    """Acceptance: the 2-D (cycles, energy) Pareto frontier on ResNet-50
+    inference contains the min-cycles and the min-energy grid points."""
+    budget, g_energy, _ = table8_energy[("inference", 16)]
+    study = Study(_hw(INFER_PRESETS, 16))
+    res = study.search(Workload("resnet50"), budget, budget)
+    front = res.pareto()
+    assert res.best in front                       # min-cycles point
+    assert g_energy.best in front                  # min-energy point
+    # frontier points are mutually non-dominated
+    pairs = [(p.cycles, res.energy_of(p)) for p in front]
+    for i, (c1, e1) in enumerate(pairs):
+        for j, (c2, e2) in enumerate(pairs):
+            if i != j:
+                assert not (c2 <= c1 and e2 <= e1
+                            and (c2 < c1 or e2 < e1))
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warn + bit-identical to the Study path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("training", [False, True])
+@pytest.mark.parametrize("method", ["grid", "refine"])
+def test_search_shim_warns_and_matches_study(training, method):
+    """The old ``search(hw, net, training=..., method=...)`` signature on
+    the Table VIII 16x16 fixtures: DeprecationWarning + results
+    bit-identical to the explicit Study/Workload path."""
+    presets = TRAIN_PRESETS if training else INFER_PRESETS
+    hw = _hw(presets, 16)
+    net = resnet50(32, bn=True) if training else resnet50(1, bn=False)
+    with pytest.warns(DeprecationWarning, match="Study"):
+        old = search(hw, net, 512, 512, training=training, method=method)
+    new = Study(hw).search(Workload(net=tuple(net), training=training),
+                           512, 512, method=method)
+    _assert_same_result(old, new)
+
+
+def test_search_many_shim_warns_and_matches_study():
+    nets = {"a": tiny_net(), "b": tiny_train_net()}
+    with pytest.warns(DeprecationWarning):
+        old = search_many(HW16, nets, 256, 256, sizes=GRID, bws=GRID,
+                          tol=0.5)
+    new = Study(HW16, sizes=GRID, bws=GRID, tol=0.5).search_many(
+        {k: Workload(net=tuple(v)) for k, v in nets.items()}, 256, 256)
+    for key in nets:
+        _assert_same_result(old[key], new[key])
+
+
+# ---------------------------------------------------------------------------
+# Workload semantics
+# ---------------------------------------------------------------------------
+
+def test_workload_named_network_defaults():
+    """Named networks follow simulate()'s conventions: inference batch 1
+    BN-folded, training batch 32 with BN + Table I expansion."""
+    inf = Workload("resnet50").layers()
+    assert inf == resnet50(1, bn=False)
+    trn = Workload("resnet50", training=True).layers()
+    assert trn == expand_training_graph(resnet50(32, bn=True))
+    b4 = Workload("resnet18", batch=4).layers()
+    assert b4 == NETWORKS["resnet18"](4, bn=False)
+
+
+def test_workload_layer_list_and_coercions():
+    net = tiny_net()
+    wl = Workload(net=net)          # list coerced to tuple, hashable
+    assert wl.net == tuple(net)
+    assert hash(wl) == hash(Workload(net=tuple(net)))
+    assert wl.layers() == net
+    assert Workload(net=net, training=True).layers() \
+        == expand_training_graph(net)
+    with pytest.raises(ValueError, match="batch"):
+        Workload(net=net, batch=8)
+    assert as_workload(wl) is wl
+    assert as_workload("resnet50") == Workload("resnet50")
+    assert as_workload(net).net == tuple(net)
+    with pytest.raises(TypeError):
+        as_workload(42)
+    assert Workload("resnet50", training=True).label == "resnet50:train"
+    assert Workload(net=net, name="mine").label == "mine"
+
+
+# ---------------------------------------------------------------------------
+# Study ownership: workers, caches, method registry
+# ---------------------------------------------------------------------------
+
+def test_workers_bit_identical():
+    """Fanned-out table builds must not change a single bit of the result
+    (grid and refine), and the parallel builds are accounted."""
+    net = tiny_net()
+    wl = Workload(net=tuple(net))
+    clear_table_caches()
+    serial = Study(HW16, sizes=GRID, bws=GRID, tol=0.5, workers=1)
+    parallel = Study(HW16, sizes=GRID, bws=GRID, tol=0.5, workers=2)
+    g0 = serial.search(wl, 256, 256)
+    clear_table_caches()
+    g1 = parallel.search(wl, 256, 256)
+    assert (g0.grid.costs == g1.grid.costs).all()
+    assert g0.best == g1.best and g0.worst == g1.worst
+    assert table_cache_stats()["conv_parallel_builds"] > 0
+    clear_table_caches()
+    r0 = serial.search(wl, 256, 256, method="refine")
+    clear_table_caches()
+    r1 = parallel.search(wl, 256, 256, method="refine")
+    assert r0.best == r1.best and r0.archive == r1.archive
+    assert r0.refine.trajectory == r1.refine.trajectory
+
+
+def test_default_workers_env(monkeypatch):
+    monkeypatch.setenv("REPRO_DSE_WORKERS", "3")
+    assert default_workers() == 3
+    assert Study(HW16).workers == 3
+    monkeypatch.setenv("REPRO_DSE_WORKERS", "junk")
+    assert default_workers() == 0
+    monkeypatch.delenv("REPRO_DSE_WORKERS")
+    assert Study(HW16, workers=5).workers == 5
+
+
+def test_cross_objective_sweep_rebuilds_nothing():
+    """Energy tensors live inside the cached tables, so a cycles sweep
+    followed by an energy (then EDP) sweep over the same budgets builds
+    zero new tables."""
+    clear_table_caches()
+    st = Study(HW16, sizes=GRID, bws=GRID, tol=0.5)
+    wl = Workload(net=tuple(tiny_net()))
+    st.search(wl, 256, 256, objective="cycles")
+    after_cycles = table_cache_stats()
+    st.search(wl, 256, 256, objective="energy")
+    st.search(wl, 256, 256, objective="edp")
+    after_energy = table_cache_stats()
+    assert after_energy["conv_misses"] == after_cycles["conv_misses"]
+    assert after_energy["simd_misses"] == after_cycles["simd_misses"]
+    assert after_energy["conv_hits"] > after_cycles["conv_hits"]
+    by_kind = after_energy["by_kind"]
+    assert by_kind["conv"]["misses"] == after_energy["conv_misses"]
+    assert by_kind["simd"]["entries"] == after_energy["simd_entries"]
+
+
+def test_study_method_registry_is_local():
+    st = Study(HW16, sizes=GRID, bws=GRID, tol=0.5)
+    calls = []
+
+    def fake(hw, nets, *a, **kw):
+        calls.append(sorted(nets))
+        return {name: st.search(Workload(net=nets[name]), *a[:2])
+                for name in nets}
+
+    st.register_method("fake", fake)
+    res = st.search(Workload(net=tuple(tiny_net()), name="x"), 256, 256,
+                    method="fake")
+    assert calls == [["x"]] and res.best.cycles > 0
+    with pytest.raises(ValueError, match="unknown search method"):
+        st.search(Workload(net=tuple(tiny_net())), 256, 256,
+                  method="anneal")
+    # the instance-local method never leaked into the global registry
+    with pytest.raises(ValueError, match="unknown search method"):
+        Study(HW16, sizes=GRID, bws=GRID, tol=0.5).search(
+            Workload(net=tuple(tiny_net())), 256, 256, method="fake")
+
+
+def test_objective_scored_frontier_and_economic():
+    """points/within/economic_min_* operate in the result's objective."""
+    st = Study(HW16, sizes=GRID, bws=GRID, tol=0.5)
+    res = st.search(Workload(net=tuple(tiny_net())), 256, 256,
+                    objective="energy")
+    limit = res.best_score * 1.15
+    assert res.points == res.within(0.15)
+    assert res.best in res.points
+    for p in res.points:
+        assert res.score_of(p) <= limit
+    eco = res.economic_min_sram()
+    assert eco.total_size_kb <= res.best.total_size_kb
+    assert res.phase_breakdown(res.best).total == res.best.cycles
