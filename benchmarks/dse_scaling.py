@@ -1,20 +1,43 @@
 """DSE throughput micro-benchmark: candidates evaluated per second for the
 legacy scalar double loop (``search_reference``) vs the tensorized grid
-engine (``search``), on the Table VIII ResNet-50 setup.
+engine (``search``), on the Table VIII ResNet-50 setup — plus the two
+build phases upstream of the grid reduction:
 
-The legacy loop is timed on the smaller budgets only (it is the slow path
-this benchmark exists to track); the tensorized engine is additionally
-timed on the full Table VIII budgets.  Tiling caches are cleared before
-every timed run so neither path inherits the other's warm state.
+  * ``tiling_build``   — the greedy tiling derivation for every (size
+    triple x conv shape) and (vmem x SIMD shape) of the table8 grid:
+    scalar reference walk vs the vectorized batch kernels (the dominant
+    serial cost of a cold sweep since PR 1 tensorized everything
+    downstream of it).  The batch results are asserted elementwise
+    bit-identical to the scalar.
+  * ``table_build``    — the full serial (workers=0) cost-table build for
+    the same grid: the legacy per-triple ``ConvTable`` loop over
+    scalar-derived tilings vs ``batch_build_conv_tables``'s one
+    vectorized pass per layer.  Tables are asserted field-identical, and
+    the speedup is asserted >= 3x (the PR 5 acceptance bar).
+
+Tiling and table caches are cleared before every timed run so no path
+inherits another's warm state.
 """
 from __future__ import annotations
 
 from typing import List
 
+import numpy as np
+
 from repro.core import INFER_PRESETS
-from repro.core.dse import clear_table_caches, search, search_reference
+from repro.core.dse import (_GridEngine, _project, _tuples, ConvTable,
+                            _conv_table_key, _CONV_TABLE_CACHE,
+                            batch_build_conv_tables, clear_table_caches,
+                            search, search_reference)
+from repro.core.hardware import KB
 from repro.core.networks import resnet50
-from repro.core.tiling import clear_tiling_caches
+from repro.core.tiling import (_conv_hw_key, _conv_layer_key, _simd_hw_key,
+                               _simd_layer_key, _CONV_TILING_CACHE,
+                               clear_tiling_caches,
+                               derive_conv_tiling_reference,
+                               derive_conv_tilings_batch,
+                               derive_simd_tiling_reference,
+                               derive_simd_tilings_batch)
 
 from .common import row, timed
 
@@ -27,12 +50,123 @@ def _clear_caches() -> None:
 
 COMPARE_BUDGETS = (512, 1024, 2048)  # legacy + tensorized, equivalence-checked
 SCALE_BUDGETS = (4096,)              # tensorized only
+TABLE8_BUDGET = 2048                 # grid for the build-phase timings
+
+
+def _table8_grid(hw, net):
+    """Unique conv size triples (kB) and vmem sizes (kB) of the table8
+    grid, plus the deduped layer-shape unions."""
+    size_tuples = _tuples((32, 64, 128, 256, 512, 1024, 2048), 4,
+                          TABLE8_BUDGET * 0.85, TABLE8_BUDGET * 1.15)
+    s3s, _ = _project(size_tuples, lambda t: t[:3])
+    vmems, _ = _project(size_tuples, lambda t: t[3])
+    eng = _GridEngine(hw, {"net": net})
+    return s3s, vmems, eng._conv_union, eng._simd_union
+
+
+def _derive_scalar(hw, s3s, vmems, convs, simds):
+    """Legacy-world tiling derivation: one scalar greedy walk per
+    (candidate, layer shape) pair; returns {key: tiling} for seeding."""
+    out = {}
+    for wb, ib, ob in s3s:
+        hw_t = hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
+        for layer in convs:
+            out[(_conv_hw_key(hw_t), _conv_layer_key(layer))] = \
+                derive_conv_tiling_reference(hw_t, layer)
+    for vm in vmems:
+        hw_v = hw.replace(vmem=vm * KB)
+        for layer in simds:
+            out[(_simd_hw_key(hw_v), _simd_layer_key(layer))] = \
+                derive_simd_tiling_reference(hw_v, layer)
+    return out
+
+
+def _derive_batched(hw, s3s, vmems, convs, simds):
+    """Vectorized derivation: one numpy pass per layer shape covers the
+    whole candidate axis."""
+    tri = [(wb * KB, ib * KB, ob * KB) for wb, ib, ob in s3s]
+    vms = [vm * KB for vm in vmems]
+    conv = {id(l): derive_conv_tilings_batch(hw, tri, l) for l in convs}
+    simd = {id(l): derive_simd_tilings_batch(hw, vms, l) for l in simds}
+    return conv, simd
 
 
 def run() -> List[str]:
     hw = INFER_PRESETS[64]
     net = resnet50(1, bn=False)
     rows: List[str] = []
+
+    # ---- tiling_build: scalar greedy walk vs vectorized batch -------------
+    # every build-phase timing is best-of-two (cold caches both times):
+    # the compared quantities are deterministic, so min() strips scheduler
+    # noise on small CI containers without changing what is measured
+    s3s, vmems, convs, simds = _table8_grid(hw, net)
+    n_tilings = len(s3s) * len(convs) + len(vmems) * len(simds)
+
+    def best_of_two(fn, *args):
+        _clear_caches()
+        us1, out = timed(fn, *args)
+        _clear_caches()
+        us2, out = timed(fn, *args)
+        return min(us1, us2), out
+
+    us_scalar, scalar_tls = best_of_two(_derive_scalar, hw, s3s, vmems,
+                                        convs, simds)
+    us_batch, (conv_tls, simd_tls) = best_of_two(_derive_batched, hw, s3s,
+                                                 vmems, convs, simds)
+    # elementwise bit-equivalence of every derived tiling
+    for layer in convs:
+        for (wb, ib, ob), t in zip(s3s, conv_tls[id(layer)]):
+            hw_t = hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
+            assert t == scalar_tls[(_conv_hw_key(hw_t),
+                                    _conv_layer_key(layer))]
+    for layer in simds:
+        for vm, t in zip(vmems, simd_tls[id(layer)]):
+            hw_v = hw.replace(vmem=vm * KB)
+            assert t == scalar_tls[(_simd_hw_key(hw_v),
+                                    _simd_layer_key(layer))]
+    rows.append(row(
+        "dse_scaling.tiling_build.scalar", us_scalar,
+        f"tilings={n_tilings};per_s={n_tilings / (us_scalar / 1e6):.0f}"))
+    rows.append(row(
+        "dse_scaling.tiling_build.batched", us_batch,
+        f"tilings={n_tilings};per_s={n_tilings / (us_batch / 1e6):.0f};"
+        f"speedup={us_scalar / us_batch:.1f}x"))
+
+    # ---- table_build: legacy serial ConvTable loop vs batch build ---------
+    hws = [hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
+           for wb, ib, ob in s3s]
+
+    def build_scalar():
+        # legacy world: a scalar greedy walk per (triple, layer) feeding
+        # the tiling cache, then one per-layer Python loop per ConvTable
+        for key, t in _derive_scalar(hw, s3s, (), convs, ()).items():
+            _CONV_TILING_CACHE[key] = t
+        return [ConvTable(h, convs) for h in hws]
+
+    def build_batched():
+        batch_build_conv_tables(hws, convs)
+        return [_CONV_TABLE_CACHE[_conv_table_key(h, convs)] for h in hws]
+
+    us_tscalar, scalar_tables = best_of_two(build_scalar)
+    us_tbatch, batch_tables = best_of_two(build_batched)
+    for st, bt in zip(scalar_tables, batch_tables):
+        for f in ("c_tile", "o1", "o2", "o4", "o5", "w_bits", "wb_bits",
+                  "i_bits", "ps_bits", "pls_bits", "busy", "dram"):
+            assert np.array_equal(getattr(st, f), getattr(bt, f)), f
+        for buf in st.sram:
+            assert np.array_equal(st.sram[buf], bt.sram[buf]), buf
+    speedup = us_tscalar / us_tbatch
+    assert speedup >= 3.0, f"table_build speedup {speedup:.2f}x < 3x"
+    rows.append(row(
+        "dse_scaling.table_build.scalar", us_tscalar,
+        f"tables={len(hws)};tables_per_s={len(hws) / (us_tscalar / 1e6):.0f}"))
+    rows.append(row(
+        "dse_scaling.table_build.batched", us_tbatch,
+        f"tables={len(hws)};tables_per_s={len(hws) / (us_tbatch / 1e6):.0f};"
+        f"speedup={speedup:.1f}x"))
+
+    # ---- end-to-end: legacy scalar loop vs tensorized engine --------------
     for budget in COMPARE_BUDGETS:
         _clear_caches()
         us_ref, ref = timed(search_reference, hw, net, budget, budget)
@@ -40,6 +174,7 @@ def run() -> List[str]:
         us_new, res = timed(search, hw, net, budget, budget)
         n = res.n_candidates
         assert ref.best == res.best and ref.worst == res.worst, budget
+        assert ref.within(0.15) == res.points, budget
         rows.append(row(
             f"dse_scaling.loop.{budget}", us_ref,
             f"cands={n};cands_per_s={n / (us_ref / 1e6):.0f}"))
@@ -54,4 +189,5 @@ def run() -> List[str]:
         rows.append(row(
             f"dse_scaling.tensor.{budget}", us_new,
             f"cands={n};cands_per_s={n / (us_new / 1e6):.0f}"))
+    _clear_caches()
     return rows

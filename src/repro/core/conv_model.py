@@ -14,7 +14,9 @@ Also provides the two degraded baselines of Fig. 5 ("No-Stall" and
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Sequence
+
+import numpy as np
 
 from .hardware import HardwareSpec
 from .layers import ConvLayer
@@ -196,6 +198,84 @@ def conv_segment_quantities(hw: HardwareSpec, layer: ConvLayer,
         w_bits=w_bits, wb_bits=w_bits + b_bits,
         i_bits=t.ifmap_tile_elems(layer.s) * hw.b_i,
         ps_bits=p_bits, pls_bits=2 * p_bits)
+
+
+def conv_quantities_batch(hw: HardwareSpec, layer: ConvLayer,
+                          tilings: Sequence[ConvTiling]
+                          ) -> Dict[str, np.ndarray]:
+    """Vectorized per-candidate cost-table quantities for ONE layer across
+    many tilings (one per buffer-size candidate): the
+    ``ConvSegmentQuantities`` fields plus the busy/DRAM/SRAM energy
+    tensors a ``ConvTable`` column carries.  Bit-identical per candidate
+    to the scalar ``conv_segment_quantities`` / ``conv_dram_bits`` /
+    ``conv_sram_bits`` / ``conv_tile_compute_cycles`` composition (same
+    integer arithmetic, evaluated on the candidate axis), which is what
+    lets ``dse.batch_build_conv_tables`` assemble whole table lattices
+    without a per-(size, layer) Python walk.
+
+    ``tilings`` is either a sequence of ``ConvTiling``s or the
+    struct-of-arrays 9-tuple ``tiling._derive_conv_tiling_arrays``
+    returns (the zero-materialization fast path)."""
+    if isinstance(tilings, tuple) and len(tilings) == 9 \
+            and isinstance(tilings[0], np.ndarray):
+        T_oh, T_ow, T_n, T_kh, T_kw, T_ic, T_oc, t_ic, t_oc = tilings
+    else:
+        f = np.array([[t.T_oh, t.T_ow, t.T_n, t.T_kh, t.T_kw, t.T_ic,
+                       t.T_oc, t.t_ic, t.t_oc] for t in tilings],
+                     dtype=np.int64).T
+        T_oh, T_ow, T_n, T_kh, T_kw, T_ic, T_oc, t_ic, t_oc = f
+
+    def cd(a, b):
+        return -(-a // b)
+
+    m_oh = cd(layer.oh, T_oh); m_ow = cd(layer.ow, T_ow)
+    m_n = cd(layer.n, T_n); m_kh = cd(layer.kh, T_kh)
+    m_kw = cd(layer.kw, T_kw); m_ic = cd(layer.ic, T_ic)
+    m_oc = cd(layer.oc, T_oc)
+    r_ic = cd(T_ic, t_ic); r_oc = cd(T_oc, t_oc)
+    m_w_tile = m_kh * m_kw * m_ic * m_oc
+    m_spatial = m_oh * m_ow * m_n
+    m_accum = m_kh * m_kw * m_ic
+    m_outer = m_spatial * m_w_tile
+    m_inner = T_oh * T_ow * T_n * T_kh * T_kw * r_ic * r_oc
+
+    c_tile = (T_oh * T_ow * T_n * T_kh * T_kw
+              * cd(T_ic, hw.J) * cd(T_oc, hw.K)) + hw.pso_sa
+    o5 = m_oc
+    o4 = m_w_tile - m_oc                                        # Eq. 17
+    o1 = m_oc * (m_spatial - 1)
+    o2 = (m_outer - m_spatial * m_oc) - o4
+    assert (o1 >= 0).all() and (o2 >= 0).all() and (o4 >= 0).all()
+    assert (o1 + o2 + o4 + o5 == m_outer).all()
+
+    w_elems = T_kh * T_kw * T_ic * T_oc                         # Eq. 2
+    ih = (T_oh - 1) * layer.s + T_kh
+    iw = (T_ow - 1) * layer.s + T_kw
+    i_elems = ih * iw * T_n * T_ic                              # Eq. 5
+    p_elems = T_oh * T_ow * T_n * T_oc                          # Eq. 8
+    w_bits = w_elems * hw.b_w
+    b_bits = T_oc * hw.b_b if layer.has_bias else 0
+    ps_bits = p_elems * hw.b_p
+
+    m_p = m_spatial * m_oc * (2 * m_accum - 1)                  # Eq. 9
+    dram = (w_elems * m_w_tile * hw.b_w                         # Eq. 4
+            + i_elems * m_outer * hw.b_i                        # Eqs. 6-7
+            + p_elems * m_p * hw.b_p                            # Eq. 10
+            + (T_oc * m_oc * hw.b_b if layer.has_bias else 0))  # Eq. 11
+
+    iters = m_inner * m_outer                                   # Table III
+    ofmap_elems = layer.ofmap_elems
+    sram = {"wbuf": t_ic * t_oc * iters * hw.b_w,
+            "ibuf": t_ic * iters * hw.b_i,
+            "obuf": (t_oc * 2 * iters - ofmap_elems) * hw.b_p,
+            "bbuf": (np.full(len(T_oc), ofmap_elems * hw.b_b, dtype=np.int64)
+                     if layer.has_bias
+                     else np.zeros(len(T_oc), dtype=np.int64))}
+    return {"c_tile": c_tile, "o1": o1, "o2": o2, "o4": o4, "o5": o5,
+            "w_bits": w_bits, "wb_bits": w_bits + b_bits,
+            "i_bits": i_elems * hw.b_i,
+            "ps_bits": ps_bits, "pls_bits": 2 * ps_bits,
+            "busy": c_tile * m_outer, "dram": dram, "sram": sram}
 
 
 def conv_stall_cycles(hw: HardwareSpec, layer: ConvLayer, t: ConvTiling,

@@ -62,9 +62,14 @@ tensors of Sec. VI — busy cycles, SRAM bits per buffer, DRAM bits — all
 bandwidth-independent, so any ``Objective`` (energy, EDP, power caps; see
 ``core.objectives``) prices the whole grid from one vectorized
 ``compute_energy_batch`` application and a cycles sweep followed by an
-energy sweep rebuilds nothing.  ``prefetch_conv_tables`` fans uncached
-per-size-triple builds across worker processes (``Study(workers=N)`` /
-``$REPRO_DSE_WORKERS``), bit-identical to serial.
+energy sweep rebuilds nothing.  The serial default builds uncached
+per-size-triple tables through ``batch_build_conv_tables`` — the tiling
+derivation and every table quantity are computed for ALL candidate size
+triples in one vectorized pass per layer (``derive_conv_tilings_batch``
++ ``conv_quantities_batch``), never one Python walk per (triple, layer)
+pair; ``prefetch_conv_tables`` remains the many-core option that fans
+scalar builds across worker processes (``Study(workers=N)`` /
+``$REPRO_DSE_WORKERS``).  Both are bit-identical to the scalar loop.
 
 The preferred entry point is ``repro.core.study.Study`` (Workload /
 Objective / Study); ``search``/``search_many`` below survive as thin
@@ -82,15 +87,17 @@ import numpy as np
 
 from .backward import expand_training_graph
 from .conv_model import (conv_dram_bits, conv_multipliers,
-                         conv_segment_quantities, conv_sram_bits)
+                         conv_quantities_batch, conv_segment_quantities,
+                         conv_sram_bits)
 from .energy import DEFAULT_ENERGY, EnergyModel, compute_energy_batch
 from .hardware import KB, HardwareSpec
 from .objectives import Cycles, MetricBatch, Objective, resolve_objective
 from .layers import ConvLayer, SimdLayer
 from .simd_model import simd_part_tile_bits, simulate_simd
-from .tiling import (_conv_hw_key, _conv_layer_key, _simd_hw_key,
+from .tiling import (_conv_hw_key, _conv_layer_key,
+                     _derive_conv_tiling_arrays, _simd_hw_key,
                      _simd_layer_key, ceil_div, make_conv_tiling,
-                     make_simd_tiling)
+                     make_simd_tiling, prefill_simd_tilings)
 
 Layer = Union[ConvLayer, SimdLayer]
 
@@ -115,6 +122,26 @@ class ConvTable:
     that prices its cycles (a cycles sweep followed by an energy sweep
     rebuilds nothing).
     """
+
+    @classmethod
+    def _from_columns(cls, phases: Tuple[str, ...],
+                      cols: Mapping[str, np.ndarray],
+                      busy: np.ndarray, dram: np.ndarray,
+                      sram: Dict[str, np.ndarray]) -> "ConvTable":
+        """Assemble a table from precomputed per-layer column vectors (the
+        ``batch_build_conv_tables`` path: one vectorized quantity pass per
+        layer covers every size triple, and each table is a column slice).
+        Field values are bit-identical to the scalar ``__init__``."""
+        t = cls.__new__(cls)
+        t.phases = phases
+        t.c_tile = cols["c_tile"]
+        t.o1, t.o2 = cols["o1"], cols["o2"]
+        t.o4, t.o5 = cols["o4"], cols["o5"]
+        t.w_bits, t.wb_bits = cols["w_bits"], cols["wb_bits"]
+        t.i_bits = cols["i_bits"]
+        t.ps_bits, t.pls_bits = cols["ps_bits"], cols["pls_bits"]
+        t.busy, t.dram, t.sram = busy, dram, sram
+        return t
 
     def __init__(self, hw: HardwareSpec, layers: Sequence[ConvLayer]):
         n = len(layers)
@@ -270,7 +297,8 @@ _SIMD_TABLE_CACHE: Dict[tuple, SimdTable] = {}
 _PREFETCHED_UNTOUCHED: set = set()      # parallel builds not yet fetched
 _TABLE_CACHE_STATS = {"conv_hits": 0, "conv_misses": 0,
                       "simd_hits": 0, "simd_misses": 0,
-                      "conv_parallel_builds": 0}
+                      "conv_parallel_builds": 0,
+                      "conv_batch_builds": 0}
 
 
 def _conv_table_key(hw: HardwareSpec, layers: Sequence[ConvLayer]) -> tuple:
@@ -320,20 +348,83 @@ def _build_conv_table(args: Tuple[HardwareSpec, Tuple[ConvLayer, ...]]
     return ConvTable(hw, layers)
 
 
+def batch_build_conv_tables(hws: Sequence[HardwareSpec],
+                            layers: Sequence[ConvLayer]) -> None:
+    """Build the ConvTables for every hardware variant not already cached
+    in ONE vectorized pass per layer, and seed the shared cache.
+
+    This is the serial fast path (and the default): the greedy tiling
+    derivation runs once per layer over the whole candidate axis — in
+    struct-of-arrays form (``_derive_conv_tiling_arrays``), so no
+    per-candidate ``ConvTiling`` objects are ever materialized — the
+    per-layer table quantities are computed as candidate-axis vectors
+    (``conv_quantities_batch``), and each table is a column slice: no
+    per-(size triple, layer) Python walk anywhere.  Bit-identical to the scalar ``ConvTable`` loop; each
+    seeded table is accounted as a miss on first retrieval (exactly like
+    the fork-pool prefetch), so cache statistics match the legacy serial
+    path.  ``table_cache_stats()['conv_batch_builds']`` counts the tables
+    built this way."""
+    layers = list(layers)
+    # one layers-part tuple shared by every per-variant cache key (the
+    # inner tuple of _conv_table_key, hoisted out of the hw loop)
+    lpart = tuple((_conv_layer_key(l), l.phase) for l in layers)
+    missing = [(key, hw) for hw in dict.fromkeys(hws)
+               if (key := (_conv_hw_key(hw), lpart))
+               not in _CONV_TABLE_CACHE]
+    if not missing:
+        return
+    base = missing[0][1]
+    tail = _conv_hw_key(base)[3:]       # bbuf, bit widths, J, K
+    if any(key[0][3:] != tail for key, _ in missing):
+        raise ValueError("batch_build_conv_tables requires all hardware "
+                         "variants to share every conv invariant except "
+                         "the wbuf/ibuf/obuf sizes")
+    triples = [(hw.wbuf, hw.ibuf, hw.obuf) for _, hw in missing]
+    n_l, n_t = len(layers), len(triples)
+    f_fields = ("c_tile", "o1", "o2", "o4", "o5", "w_bits", "wb_bits",
+                "i_bits", "ps_bits", "pls_bits")
+    mats = {f: np.zeros((n_l, n_t)) for f in f_fields}
+    busy = np.zeros((n_l, n_t), dtype=np.int64)
+    dram = np.zeros((n_l, n_t), dtype=np.int64)
+    sram = {buf: np.zeros((n_l, n_t), dtype=np.int64)
+            for buf in ("wbuf", "ibuf", "obuf", "bbuf")}
+    for x, layer in enumerate(layers):
+        q = conv_quantities_batch(
+            base, layer, _derive_conv_tiling_arrays(base, triples, layer))
+        for f in f_fields:
+            mats[f][x] = q[f]
+        busy[x] = q["busy"]
+        dram[x] = q["dram"]
+        for buf in sram:
+            sram[buf][x] = q["sram"][buf]
+    phases = tuple(l.phase for l in layers)
+    # column views into the [n_layers x n_triples] matrices (a few KB per
+    # matrix — cheaper than 14 copies per table, and numerically identical)
+    for i, (key, _hw) in enumerate(missing):
+        _CONV_TABLE_CACHE[key] = ConvTable._from_columns(
+            phases, {f: mats[f][:, i] for f in f_fields},
+            busy[:, i], dram[:, i],
+            {buf: sram[buf][:, i] for buf in sram})
+        _PREFETCHED_UNTOUCHED.add(key)
+        _TABLE_CACHE_STATS["conv_batch_builds"] += 1
+
+
 def prefetch_conv_tables(hws: Sequence[HardwareSpec],
                          layers: Sequence[ConvLayer],
                          workers: int) -> None:
     """Build the ConvTables for every hardware variant not already cached,
     fanned out across ``workers`` processes, and seed the shared cache.
 
-    The per-size-triple builds are independent (the remaining serial
-    bottleneck of the tensorized DSE: one greedy tiling derivation per
-    unique size triple x layer shape), so the fan-out is embarrassingly
-    parallel and — each build being deterministic — bit-identical to the
-    serial path.  Each prefetched table is accounted as a miss on its
-    first retrieval (not a hit), so cache statistics match the serial
-    path exactly; callers with ``workers <= 1`` (or a single missing
-    table, or no fork start method) fall back to serial implicitly."""
+    The per-size-triple builds are independent, so the fan-out is
+    embarrassingly parallel and — each build being deterministic —
+    bit-identical to the serial path.  Since the serial path itself now
+    vectorizes the tiling derivation and table quantities across the
+    whole candidate axis (``batch_build_conv_tables``), the fork pool is
+    the *many-core* option for heavy shape unions, not the default.  Each
+    prefetched table is accounted as a miss on its first retrieval (not a
+    hit), so cache statistics match the serial path exactly; callers with
+    ``workers <= 1`` (or a single missing table, or no fork start method)
+    fall back to the vectorized serial build implicitly."""
     missing = [(key, hw) for hw in dict.fromkeys(hws)
                if (key := _conv_table_key(hw, layers))
                not in _CONV_TABLE_CACHE]
@@ -367,9 +458,11 @@ def table_cache_stats() -> Dict[str, object]:
     stats["by_kind"] = {
         "conv": {"hits": stats["conv_hits"], "misses": stats["conv_misses"],
                  "entries": stats["conv_entries"],
-                 "parallel_builds": stats["conv_parallel_builds"]},
+                 "parallel_builds": stats["conv_parallel_builds"],
+                 "batch_builds": stats["conv_batch_builds"]},
         "simd": {"hits": stats["simd_hits"], "misses": stats["simd_misses"],
-                 "entries": stats["simd_entries"], "parallel_builds": 0},
+                 "entries": stats["simd_entries"], "parallel_builds": 0,
+                 "batch_builds": 0},
     }
     return stats
 
@@ -872,8 +965,11 @@ class _GridEngine:
         order, hence bit-identical to the scalar reference); phase matrices
         partition them.  The energy fields are per-network vectors over the
         size triples — busy cycles, SRAM bits per buffer, DRAM bits — the
-        bandwidth-independent half of the Sec. VI model.  ``workers > 1``
-        fans the uncached table builds out across processes first."""
+        bandwidth-independent half of the Sec. VI model.  Uncached tables
+        are built up front: ``workers > 1`` fans scalar builds out across
+        processes, and whatever remains is batch-built serially in one
+        vectorized pass per layer (``batch_build_conv_tables``) before
+        the per-triple loop walks the cache."""
         bw_w = np.array([b[0] for b in b3s], dtype=float)
         bw_i = np.array([b[1] for b in b3s], dtype=float)
         bw_o = np.array([b[2] for b in b3s], dtype=float)
@@ -890,13 +986,12 @@ class _GridEngine:
                           for k in ("busy", "wbuf", "ibuf", "obuf",
                                     "bbuf", "dram")}
                    for name in self.conv_cols}
+        hws = [self.hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
+               for wb, ib, ob in s3s]
         if workers > 1:
-            prefetch_conv_tables(
-                [self.hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
-                 for wb, ib, ob in s3s],
-                self._conv_union, workers)
-        for si, (wb, ib, ob) in enumerate(s3s):
-            hw = self.hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
+            prefetch_conv_tables(hws, self._conv_union, workers)
+        batch_build_conv_tables(hws, self._conv_union)
+        for si, hw in enumerate(hws):
             table = get_conv_table(hw, self._conv_union)
             per_layer = table.layer_cycles_batch(bw_w, bw_i, bw_o)
             for name, cols in self.conv_cols.items():
@@ -932,6 +1027,10 @@ class _GridEngine:
         efields = {name: {k: np.zeros(len(vmems), dtype=np.int64)
                           for k in ("busy", "vmem", "dram")}
                    for name in self.simd_ids}
+        # One vectorized derivation per layer covers every VMem candidate
+        # before the per-size loop (the table builds then hit the cache).
+        prefill_simd_tilings(self.hw, [vm * KB for vm in vmems],
+                             self._simd_union)
         for vi, vm in enumerate(vmems):
             table = get_simd_table(self.hw.replace(vmem=vm * KB),
                                    self._simd_union)

@@ -42,12 +42,13 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .dse import (DSEPoint, DSEResult, _GridEngine, get_conv_table,
-                  get_simd_table, prefetch_conv_tables, _tuples,
-                  register_search_method)
+from .dse import (DSEPoint, DSEResult, _GridEngine, batch_build_conv_tables,
+                  get_conv_table, get_simd_table, prefetch_conv_tables,
+                  _tuples, register_search_method)
 from .energy import DEFAULT_ENERGY, EnergyModel, compute_energy_batch
 from .hardware import KB, HardwareSpec
 from .objectives import Cycles, MetricBatch, Objective, resolve_objective
+from .tiling import prefill_simd_tilings
 
 Tup = Tuple[int, int, int, int]
 Cand = Tuple[Tup, Tup]                     # (sizes_kb, bws)
@@ -155,11 +156,13 @@ class _RefineEvaluator:
         memo = self._conv[name]
         e_memo = self._conv_e[name]
         cols = self.eng.conv_cols[name]
+        hws = [self.hw.replace(wbuf=s3[0] * KB, ibuf=s3[1] * KB,
+                               obuf=s3[2] * KB) for s3 in need]
         if self.workers > 1:
-            prefetch_conv_tables(
-                [self.hw.replace(wbuf=s3[0] * KB, ibuf=s3[1] * KB,
-                                 obuf=s3[2] * KB) for s3 in need],
-                self.eng._conv_union, self.workers)
+            prefetch_conv_tables(hws, self.eng._conv_union, self.workers)
+        # whole neighborhoods of uncached size triples are batch-built in
+        # one vectorized pass per layer (the serial fast path)
+        batch_build_conv_tables(hws, self.eng._conv_union)
         for s3, b3s in need.items():
             self._s3_seen[name].add(s3)
             hw = self.hw.replace(wbuf=s3[0] * KB, ibuf=s3[1] * KB,
@@ -187,6 +190,8 @@ class _RefineEvaluator:
         memo = self._simd[name]
         e_memo = self._simd_e[name]
         ids = self.eng.simd_ids[name]
+        prefill_simd_tilings(self.hw, [vm * KB for vm in need],
+                             self.eng._simd_union)
         for vm, wvs in need.items():
             self._vm_seen[name].add(vm)
             table = get_simd_table(self.hw.replace(vmem=vm * KB),

@@ -121,9 +121,16 @@ class Study:
     (``sizes`` x ``bws``, four coordinates each, filtered to the +-``tol``
     budget band) with its energy model and worker pool; front-ends come
     from its method registry (``"grid"`` and ``"refine"`` built in,
-    ``register_method`` for custom ones).  ``workers > 1`` fans the
-    per-size-triple ``ConvTable`` builds out across processes — results
-    stay bit-identical to serial — defaulting to ``$REPRO_DSE_WORKERS``.
+    ``register_method`` for custom ones).
+
+    The default ``workers=0`` serial path is the fast path: uncached
+    per-size-triple ``ConvTable``s are batch-built through the vectorized
+    greedy tiling derivation — one numpy pass per layer shape covers the
+    study's whole candidate lattice (``dse.batch_build_conv_tables``).
+    ``workers > 1`` instead fans scalar builds out across forked
+    processes, the *many-core* option for very heavy shape unions where
+    fork+pickle overhead amortizes; results stay bit-identical either
+    way, defaulting to ``$REPRO_DSE_WORKERS``.
     """
 
     def __init__(self, hw: HardwareSpec, *,

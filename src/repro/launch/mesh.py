@@ -9,17 +9,25 @@ from __future__ import annotations
 
 import jax
 
+# jax.sharding.AxisType landed after 0.4.x; on older pinned JAX the
+# explicit-axis-type kwarg simply doesn't exist and every axis is Auto by
+# default, so we only pass it when the installed JAX knows it.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _mesh_kwargs(axes) -> dict:
+    if _AXIS_TYPE is None:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * len(axes)}
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(axes))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/examples (e.g. ('stage',) pipelines)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    axes = tuple(axes)
+    return jax.make_mesh(tuple(shape), axes, **_mesh_kwargs(axes))

@@ -55,10 +55,13 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_pipeline_matches_sequential():
+    # JAX_PLATFORMS=cpu is load-bearing: the script forces 4 *host*
+    # devices, and without the pin jax probes for accelerator plugins,
+    # which can hang indefinitely in sandboxed containers.
     res = subprocess.run([sys.executable, "-c", SCRIPT],
                          capture_output=True, text=True, timeout=300,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert "PIPELINE_OK" in res.stdout, res.stdout + res.stderr
 
 

@@ -1,0 +1,259 @@
+"""Batched tiling derivation vs the scalar greedy reference.
+
+``derive_conv_tilings_batch``/``derive_simd_tilings_batch`` are the
+production kernels (``make_conv_tiling``/``make_simd_tiling`` are
+one-candidate slices of them); ``derive_*_tiling_reference`` retain the
+original scalar walks.  These tests pin the batch bit-identical to the
+reference over the full Table VIII candidate lattice — ResNet-50
+inference AND training layer sets — plus seeded random off-lattice
+shapes and capacities, and cover the two greedy defects fixed alongside
+the vectorization (stranded WBuf capacity after an IBuf-forced T_ic
+shrink; the quadratic remainder-fill scan)."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import INFER_PRESETS, TRAIN_PRESETS
+from repro.core import layers as L
+from repro.core.backward import expand_training_graph
+from repro.core.dse import (BWS, SIZES_KB, ConvTable, _GridEngine,
+                            _conv_table_key, _CONV_TABLE_CACHE,
+                            _project, _tuples, batch_build_conv_tables,
+                            clear_table_caches, table_cache_stats)
+from repro.core.hardware import KB, HardwareSpec
+from repro.core.layers import ConvLayer
+from repro.core.networks import resnet50
+from repro.core.tiling import (ceil_div, clear_tiling_caches,
+                               conv_tile_fits, derive_conv_tiling_reference,
+                               derive_conv_tilings_batch,
+                               derive_simd_tiling_reference,
+                               derive_simd_tilings_batch, make_conv_tiling,
+                               make_simd_tiling, _fill_dim, _max_fit)
+
+
+def _table8_size_triples():
+    """Unique (wbuf, ibuf, obuf) byte triples across every Table VIII
+    budget window (512/1024/2048/4096 kB, +-15%, lower-bounded)."""
+    triples = []
+    for budget in (512, 1024, 2048, 4096):
+        tuples = _tuples(SIZES_KB, 4, budget * 0.85, budget * 1.15)
+        s3s, _ = _project(tuples, lambda t: t[:3])
+        triples.extend(s3s)
+    return [(wb * KB, ib * KB, ob * KB)
+            for wb, ib, ob in dict.fromkeys(triples)]
+
+
+def _table8_vmems():
+    vmems = []
+    for budget in (512, 1024, 2048, 4096):
+        tuples = _tuples(SIZES_KB, 4, budget * 0.85, budget * 1.15)
+        vs, _ = _project(tuples, lambda t: t[3])
+        vmems.extend(vs)
+    return [v * KB for v in dict.fromkeys(vmems)]
+
+
+def _unions(hw, training):
+    net = resnet50(32 if training else 1, bn=training)
+    if training:
+        net = expand_training_graph(net)
+    eng = _GridEngine(hw, {"net": net})
+    return eng._conv_union, eng._simd_union
+
+
+@pytest.mark.parametrize("training", [False, True])
+def test_batch_conv_matches_reference_over_table8_lattice(training):
+    """Bit-identical per candidate over the entire Table VIII size-triple
+    lattice, for every unique ResNet-50 conv shape of the workload."""
+    hw = (TRAIN_PRESETS if training else INFER_PRESETS)[64]
+    triples = _table8_size_triples()
+    convs, _ = _unions(hw, training)
+    assert len(convs) >= 20 and len(triples) >= 100
+    for layer in convs:
+        batch = derive_conv_tilings_batch(hw, triples, layer)
+        for tri, bt in zip(triples, batch):
+            hw_t = hw.replace(wbuf=tri[0], ibuf=tri[1], obuf=tri[2])
+            assert bt == derive_conv_tiling_reference(hw_t, layer)
+            assert conv_tile_fits(hw_t, layer, bt)
+
+
+@pytest.mark.parametrize("training", [False, True])
+def test_batch_simd_matches_reference_over_table8_lattice(training):
+    hw = (TRAIN_PRESETS if training else INFER_PRESETS)[64]
+    vmems = _table8_vmems()
+    _, simds = _unions(hw, training)
+    assert len(simds) >= 10
+    for layer in simds:
+        batch = derive_simd_tilings_batch(hw, vmems, layer)
+        for vm, bt in zip(vmems, batch):
+            assert bt == derive_simd_tiling_reference(
+                hw.replace(vmem=vm), layer)
+
+
+def test_batch_matches_reference_random_offlattice():
+    """Seeded sweep over random layer shapes and *non-power-of-two*
+    buffer capacities (the local validation twin of the hypothesis
+    property test in ``test_tiling_batch_props.py``)."""
+    rng = random.Random(20260801)
+    for _ in range(25):
+        jk = rng.choice([8, 16, 32, 64])
+        hw = HardwareSpec(J=jk, K=jk, b_w=rng.choice([8, 16]),
+                          b_i=rng.choice([8, 16]),
+                          bbuf=rng.choice([8, 16, 64]) * KB)
+        triples = [(rng.randrange(2 * KB, 3000 * KB),
+                    rng.randrange(2 * KB, 3000 * KB),
+                    rng.randrange(2 * KB, 3000 * KB))
+                   for _ in range(rng.randrange(1, 16))]
+        k = rng.choice([1, 3, 7, 56, 223])
+        s = rng.choice([1, 2])
+        o = rng.choice([1, 7, 28, 112])
+        layer = ConvLayer(name="x", n=rng.choice([1, 3, 32]),
+                          ic=rng.choice([3, 64, 513]),
+                          ih=(o - 1) * s + k, iw=(o - 1) * s + k,
+                          oc=rng.choice([10, 64, 512]), oh=o, ow=o,
+                          kh=k, kw=k, s=s, has_bias=rng.random() < 0.5)
+        batch = derive_conv_tilings_batch(hw, triples, layer)
+        for tri, bt in zip(triples, batch):
+            hw_t = hw.replace(wbuf=tri[0], ibuf=tri[1], obuf=tri[2])
+            assert bt == derive_conv_tiling_reference(hw_t, layer)
+
+        vmems = [rng.randrange(1 * KB, 3000 * KB)
+                 for _ in range(rng.randrange(1, 12))]
+        sl = rng.choice([
+            L.tensor_add("t", o, o, 4, 37),
+            L.pool("t", 28, 28, 2, 96, 3, 2),
+            L.batch_norm("t", 14, 14, 8, 130),
+            L.relu("t", 56, 56, 1, 64),
+        ])
+        sbatch = derive_simd_tilings_batch(hw, vmems, sl)
+        for vm, bt in zip(vmems, sbatch):
+            assert bt == derive_simd_tiling_reference(
+                hw.replace(vmem=vm), sl)
+
+
+def test_scalar_wrappers_route_through_batch_kernel():
+    """``make_conv_tiling``/``make_simd_tiling`` are one-candidate slices
+    of the batch kernels — including at arbitrary (non-power-of-two)
+    buffer sizes, where the remainder fill produces distinct tilings."""
+    hw = INFER_PRESETS[64].replace(wbuf=213 * KB, ibuf=97 * KB,
+                                   obuf=311 * KB, vmem=157 * KB)
+    layer = ConvLayer(name="c", n=4, ic=96, ih=30, iw=30, oc=160,
+                      oh=28, ow=28, kh=3, kw=3, s=1, has_bias=True)
+    assert make_conv_tiling(hw, layer) \
+        == derive_conv_tiling_reference(hw, layer)
+    sl = L.tensor_add("a", 28, 28, 4, 160)
+    assert make_simd_tiling(hw, sl) \
+        == derive_simd_tiling_reference(hw, sl)
+
+
+def test_cache_aware_batch_accessors_seed_and_reuse():
+    """``conv_tilings_for_triples``/``prefill_conv_tilings`` derive only
+    uncached triples, return order-aligned reference-identical tilings,
+    and seed the cache ``make_conv_tiling`` then hits (same objects)."""
+    from repro.core.tiling import (conv_tilings_for_triples,
+                                   prefill_conv_tilings)
+    hw = INFER_PRESETS[64]
+    layer = ConvLayer(name="c", n=2, ic=64, ih=16, iw=16, oc=128,
+                      oh=14, ow=14, kh=3, kw=3, s=1, has_bias=True)
+    triples = [(96 * KB, 64 * KB, 200 * KB), (64 * KB, 64 * KB, 64 * KB)]
+    clear_tiling_caches()
+    got = conv_tilings_for_triples(hw, triples, layer)
+    assert derive_conv_tilings_batch(hw, [], layer) == []   # empty is ok
+    for tri, t in zip(triples, got):
+        hw_t = hw.replace(wbuf=tri[0], ibuf=tri[1], obuf=tri[2])
+        assert t == derive_conv_tiling_reference(hw_t, layer)
+        assert make_conv_tiling(hw_t, layer) is t           # cache seeded
+    prefill_conv_tilings(hw, triples, [layer])              # full no-op
+    assert conv_tilings_for_triples(hw, triples, layer) == got
+    clear_tiling_caches()
+
+
+def test_stranded_wbuf_capacity_regrow_regression():
+    """When the IBuf guard halves T_ic, the freed WBuf capacity must be
+    re-offered to T_oc: a 2 MB WBuf with a 32 kB IBuf used to keep the
+    T_oc derived against the pre-shrink T_ic (stranding ~75% of WBuf)."""
+    hw = HardwareSpec(J=16, K=16, b_w=16, b_i=16,
+                      wbuf=2048 * KB, ibuf=32 * KB, obuf=1024 * KB)
+    layer = ConvLayer(name="big", n=1, ic=1024, ih=13, iw=13, oc=512,
+                      oh=7, ow=7, kh=7, kw=7, s=1, has_bias=False)
+    wcap = hw.wbuf // 2 * 8 // hw.b_w
+    icap = hw.ibuf // 2 * 8 // hw.b_i
+    t = make_conv_tiling(hw, layer)
+    # the guard fired: a full-window T_ic slice would overflow IBuf
+    assert t.T_kh == 7 and t.T_kw == 7
+    assert t.T_kh * t.T_kw * t.T_ic <= icap < t.T_kh * t.T_kw * 2 * t.T_ic
+    # post-fix invariant: T_oc saturates the post-shrink WBuf capacity
+    # (K-aligned); the pre-fix greedy left it at 16 here
+    cap_oc = wcap // (t.T_kh * t.T_kw * t.T_ic)
+    assert t.T_oc == min(layer.oc, cap_oc // hw.K * hw.K)
+    assert t.T_oc == 64
+    assert t == derive_conv_tiling_reference(hw, layer)
+    assert conv_tile_fits(hw, layer, t)
+
+
+def test_fill_dim_matches_exhaustive_scan():
+    """The O(sqrt(dim)) distinct-quotient fill must be byte-identical to
+    the original O(dim) scan over every tile count."""
+    def fill_dim_exhaustive(cur, dim, fits):
+        if cur >= dim:
+            return cur
+        hi = _max_fit(cur, dim, fits)
+        best_t, best_ext = cur, ceil_div(dim, cur) * cur
+        for m in range(1, ceil_div(dim, cur) + 1):
+            t = ceil_div(dim, m)
+            if t < cur:
+                break
+            if t > hi:
+                continue
+            ext = m * t
+            if ext < best_ext or (ext == best_ext and t > best_t):
+                best_t, best_ext = t, ext
+        return best_t
+
+    rng = random.Random(7)
+    for _ in range(600):
+        dim = rng.randrange(1, 3000)
+        cur = rng.randrange(1, dim + 1)
+        cap = rng.randrange(cur, 2 * dim + 1)
+        fits = lambda v, cap=cap: v <= cap
+        assert _fill_dim(cur, dim, fits) \
+            == fill_dim_exhaustive(cur, dim, fits)
+    # degenerate corners
+    for cur, dim, cap in ((1, 1, 5), (5, 5, 5), (3, 7, 3), (1, 2048, 2048)):
+        fits = lambda v, cap=cap: v <= cap
+        assert _fill_dim(cur, dim, fits) \
+            == fill_dim_exhaustive(cur, dim, fits)
+
+
+def test_batch_built_tables_identical_to_scalar_build():
+    """``batch_build_conv_tables`` must seed tables whose every field is
+    bit-identical to the scalar ``ConvTable`` constructor's, and account
+    them as misses on first retrieval (like the fork-pool prefetch)."""
+    hw0 = INFER_PRESETS[64]
+    convs, _ = _unions(hw0, training=False)
+    triples = [(64, 128, 256), (96, 96, 96), (512, 32, 1024)]
+    hws = [hw0.replace(wbuf=a * KB, ibuf=b * KB, obuf=c * KB)
+           for a, b, c in triples]
+
+    clear_tiling_caches()
+    clear_table_caches()
+    scalar = [ConvTable(hw, convs) for hw in hws]
+
+    clear_tiling_caches()
+    clear_table_caches()
+    batch_build_conv_tables(hws, convs)
+    stats = table_cache_stats()
+    assert stats["conv_batch_builds"] == len(hws)
+    assert stats["by_kind"]["conv"]["batch_builds"] == len(hws)
+    assert stats["conv_misses"] == 0        # accounted on first retrieval
+    for hw, ref in zip(hws, scalar):
+        got = _CONV_TABLE_CACHE[_conv_table_key(hw, convs)]
+        assert got.phases == ref.phases
+        for f in ("c_tile", "o1", "o2", "o4", "o5", "w_bits", "wb_bits",
+                  "i_bits", "ps_bits", "pls_bits", "busy", "dram"):
+            a, b = getattr(got, f), getattr(ref, f)
+            assert a.dtype == b.dtype and np.array_equal(a, b), f
+        for buf in ref.sram:
+            assert np.array_equal(got.sram[buf], ref.sram[buf]), buf
+    clear_tiling_caches()
+    clear_table_caches()

@@ -1,0 +1,81 @@
+"""Hypothesis property tests: the batched tiling derivation is
+elementwise bit-identical to the scalar greedy reference over random
+layer shapes and random — emphatically non-power-of-two — buffer
+capacities.  (CI installs hypothesis; locally these importorskip, and
+``test_tiling_batch.py`` carries a seeded random twin of the same
+property so the invariant is still exercised without it.)"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (installed in CI; optional locally)")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import layers as L
+from repro.core.hardware import KB, HardwareSpec
+from repro.core.layers import ConvLayer
+from repro.core.tiling import (conv_tile_fits, derive_conv_tiling_reference,
+                               derive_conv_tilings_batch,
+                               derive_simd_tiling_reference,
+                               derive_simd_tilings_batch, simd_tile_fits)
+
+hw_strategy = st.builds(
+    lambda jk, bw, bi, bb: HardwareSpec(J=jk, K=jk, b_w=bw, b_i=bi,
+                                        bbuf=bb * KB),
+    jk=st.sampled_from([8, 16, 32, 64]),
+    bw=st.sampled_from([8, 16]), bi=st.sampled_from([8, 16]),
+    bb=st.sampled_from([8, 16, 64]))
+
+# arbitrary byte counts, NOT power-of-two aligned
+triple_strategy = st.tuples(st.integers(2 * KB, 3000 * KB),
+                            st.integers(2 * KB, 3000 * KB),
+                            st.integers(2 * KB, 3000 * KB))
+
+conv_strategy = st.builds(
+    lambda n, c_in, c_out, hw_sz, k, s, bias: ConvLayer(
+        name="x", n=n, ic=c_in,
+        ih=(hw_sz - 1) * s + k, iw=(hw_sz - 1) * s + k,
+        oc=c_out, oh=hw_sz, ow=hw_sz, kh=k, kw=k, s=s, has_bias=bias),
+    n=st.integers(1, 32), c_in=st.sampled_from([3, 16, 64, 256, 513]),
+    c_out=st.sampled_from([10, 16, 64, 512]),
+    hw_sz=st.sampled_from([1, 7, 28, 112]),
+    k=st.sampled_from([1, 3, 7, 56, 223]), s=st.sampled_from([1, 2]),
+    bias=st.booleans())
+
+
+@settings(max_examples=60, deadline=None)
+@given(hw=hw_strategy, layer=conv_strategy,
+       triples=st.lists(triple_strategy, min_size=1, max_size=12))
+def test_conv_batch_elementwise_equals_scalar(hw, layer, triples):
+    batch = derive_conv_tilings_batch(hw, triples, layer)
+    for tri, bt in zip(triples, batch):
+        hw_t = hw.replace(wbuf=tri[0], ibuf=tri[1], obuf=tri[2])
+        ref = derive_conv_tiling_reference(hw_t, layer)
+        assert bt == ref
+        assert conv_tile_fits(hw_t, layer, bt)
+
+
+simd_strategy = st.builds(
+    lambda h, w, n, c, kind: {
+        "add": L.tensor_add("t", h, w, n, c),
+        "relu": L.relu("t", h, w, n, c),
+        "pool": L.pool("t", h, w, n, c, 2, 2),
+        "bn": L.batch_norm("t", h, w, n, c),
+    }[kind],
+    h=st.integers(1, 64), w=st.integers(1, 64),
+    n=st.integers(1, 32), c=st.integers(1, 2048),
+    kind=st.sampled_from(["add", "relu", "pool", "bn"]))
+
+
+@settings(max_examples=60, deadline=None)
+@given(hw=hw_strategy, layer=simd_strategy,
+       vmems=st.lists(st.integers(1 * KB, 3000 * KB),
+                      min_size=1, max_size=12))
+def test_simd_batch_elementwise_equals_scalar(hw, layer, vmems):
+    batch = derive_simd_tilings_batch(hw, vmems, layer)
+    for vm, bt in zip(vmems, batch):
+        hw_v = hw.replace(vmem=vm)
+        ref = derive_simd_tiling_reference(hw_v, layer)
+        assert bt == ref
+        assert simd_tile_fits(hw_v, layer, bt)
