@@ -1,0 +1,61 @@
+"""Persistent table store smoke: cold-store vs warm-store wall time for a
+Table VIII style sweep (ResNet-50 inference, one budget per array size).
+
+The cold pass builds every ``ConvTable``/``SimdTable`` and persists it;
+the warm pass drops the in-memory L1 and re-runs the same sweep against
+the store alone.  Asserted, not just reported: the warm sweep rebuilds
+*zero* tables (``table_cache_stats()``: store hits only, no misses, no
+builds) and its results are bit-identical to the cold pass.  The derived
+column reports the cold/warm speedup plus the raw hit counters — the
+headline number for the ROADMAP's "DSE-as-a-service" persistence story.
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import List
+
+from repro.core import HardwareSpec, INFER_PRESETS
+from repro.core.dse import clear_table_caches, table_cache_stats
+from repro.core.networks import resnet50
+from repro.core.study import Study, Workload
+
+from .common import row, timed
+
+BUDGETS = {16: 512, 64: 2048}         # smoke subset of the Table VIII axis
+
+
+def _hw(jk: int) -> HardwareSpec:
+    base = INFER_PRESETS.get(jk, INFER_PRESETS[64])
+    return base.replace(name=f"dse{jk}", J=jk, K=jk)
+
+
+def run(tag: str = "store_persistence") -> List[str]:
+    wl = Workload(net="resnet50")
+    rows: List[str] = []
+    with tempfile.TemporaryDirectory(prefix="repro-store-") as root:
+        for jk, budget in BUDGETS.items():
+            study = Study(_hw(jk), store=root)
+
+            clear_table_caches()
+            cold_us, cold = timed(study.search, wl, budget, budget)
+            cold_st = table_cache_stats()
+            assert cold_st["conv_builds"] + cold_st["simd_builds"] > 0
+
+            clear_table_caches()      # kill the L1; the store survives
+            warm_us, warm = timed(study.search, wl, budget, budget)
+            warm_st = table_cache_stats()
+            assert warm_st["conv_builds"] == 0, warm_st
+            assert warm_st["simd_builds"] == 0, warm_st
+            assert warm_st["store_misses"] == 0, warm_st
+            assert warm_st["store_hits"] > 0, warm_st
+            assert (warm.grid.costs == cold.grid.costs).all()
+            assert warm.best == cold.best
+
+            rows.append(row(
+                f"{tag}.{jk}x{jk}", warm_us,
+                f"cold_us={cold_us:.0f};speedup={cold_us / warm_us:.2f}x;"
+                f"store_hits={warm_st['store_hits']};"
+                f"rebuilds={warm_st['conv_builds'] + warm_st['simd_builds']};"
+                f"best={warm.best.cycles}"))
+    clear_table_caches()
+    return rows

@@ -8,7 +8,8 @@ from .simulator import NetworkReport, simulate, simulate_network
 from .backward import dx_conv, dw_conv, expand_training_graph
 from .objectives import (EDP, Cycles, CyclesUnderPowerCap, Energy,
                          Objective, register_objective, resolve_objective)
-from .study import Study, Workload
+from .store import TableStore, store_context
+from .study import IntegrityError, Study, Workload
 
 __all__ = [
     "HardwareSpec", "HT1", "HT2", "HT3", "HI1", "HI2", "HI3",
@@ -18,4 +19,5 @@ __all__ = [
     "dx_conv", "dw_conv", "expand_training_graph",
     "Study", "Workload", "Objective", "Cycles", "Energy", "EDP",
     "CyclesUnderPowerCap", "register_objective", "resolve_objective",
+    "TableStore", "store_context", "IntegrityError",
 ]

@@ -79,18 +79,22 @@ default cycles objective.
 from __future__ import annotations
 
 import itertools
+import os
+import time
 from dataclasses import dataclass, field, replace
 from functools import lru_cache
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from . import faultinject
 from .backward import expand_training_graph
 from .conv_model import (conv_dram_bits, conv_multipliers,
                          conv_quantities_batch, conv_segment_quantities,
                          conv_sram_bits)
 from .energy import DEFAULT_ENERGY, EnergyModel, compute_energy_batch
 from .hardware import KB, HardwareSpec
+from .store import active_store, env_float, reset_store_stats, store_stats
 from .objectives import Cycles, MetricBatch, Objective, resolve_objective
 from .layers import ConvLayer, SimdLayer
 from .simd_model import simd_part_tile_bits, simulate_simd
@@ -294,11 +298,12 @@ class SimdTable:
 
 _CONV_TABLE_CACHE: Dict[tuple, ConvTable] = {}
 _SIMD_TABLE_CACHE: Dict[tuple, SimdTable] = {}
-_PREFETCHED_UNTOUCHED: set = set()      # parallel builds not yet fetched
+_PREFETCHED_UNTOUCHED: set = set()      # parallel/store loads not yet fetched
 _TABLE_CACHE_STATS = {"conv_hits": 0, "conv_misses": 0,
                       "simd_hits": 0, "simd_misses": 0,
                       "conv_parallel_builds": 0,
-                      "conv_batch_builds": 0}
+                      "conv_batch_builds": 0,
+                      "conv_builds": 0, "simd_builds": 0}
 
 
 def _conv_table_key(hw: HardwareSpec, layers: Sequence[ConvLayer]) -> tuple:
@@ -312,39 +317,73 @@ def _simd_table_key(hw: HardwareSpec, layers: Sequence[SimdLayer]) -> tuple:
 
 
 def get_conv_table(hw: HardwareSpec, layers: Sequence[ConvLayer]) -> ConvTable:
-    """Shared, process-lifetime ConvTable constructor."""
+    """Shared, process-lifetime ConvTable constructor — the L1 over the
+    optional persistent store (``core.store``): an in-memory miss first
+    consults the active store (validated, checksummed load) and only
+    builds on a store miss, writing the fresh table back."""
     key = _conv_table_key(hw, layers)
     t = _CONV_TABLE_CACHE.get(key)
-    if t is None:
-        _TABLE_CACHE_STATS["conv_misses"] += 1
-        t = _CONV_TABLE_CACHE[key] = ConvTable(hw, layers)
-    elif key in _PREFETCHED_UNTOUCHED:
-        # First retrieval of a parallel-prefetched table: account it as
-        # the miss the caller's serial loop would have recorded, so
-        # hit/miss statistics are identical between workers=0 and >1.
-        _PREFETCHED_UNTOUCHED.discard(key)
-        _TABLE_CACHE_STATS["conv_misses"] += 1
-    else:
-        _TABLE_CACHE_STATS["conv_hits"] += 1
+    if t is not None:
+        if key in _PREFETCHED_UNTOUCHED:
+            # First retrieval of a parallel-prefetched (or store-seeded)
+            # table: account it as the miss the caller's serial loop
+            # would have recorded, so hit/miss statistics are identical
+            # between workers=0/>1 and store on/off.
+            _PREFETCHED_UNTOUCHED.discard(key)
+            _TABLE_CACHE_STATS["conv_misses"] += 1
+        else:
+            _TABLE_CACHE_STATS["conv_hits"] += 1
+        return t
+    _TABLE_CACHE_STATS["conv_misses"] += 1
+    store = active_store()
+    if store is not None:
+        t = store.load("conv", key, ConvTable)
+        if t is not None:
+            _CONV_TABLE_CACHE[key] = t
+            return t
+    _TABLE_CACHE_STATS["conv_builds"] += 1
+    t = _CONV_TABLE_CACHE[key] = ConvTable(hw, layers)
+    if store is not None:
+        store.save("conv", key, t)
     return t
 
 
 def get_simd_table(hw: HardwareSpec, layers: Sequence[SimdLayer]) -> SimdTable:
-    """Shared, process-lifetime SimdTable constructor."""
+    """Shared, process-lifetime SimdTable constructor (L1 over the
+    optional persistent store, like ``get_conv_table``)."""
     key = _simd_table_key(hw, layers)
     t = _SIMD_TABLE_CACHE.get(key)
-    if t is None:
-        _TABLE_CACHE_STATS["simd_misses"] += 1
-        t = _SIMD_TABLE_CACHE[key] = SimdTable(hw, layers)
-    else:
+    if t is not None:
         _TABLE_CACHE_STATS["simd_hits"] += 1
+        return t
+    _TABLE_CACHE_STATS["simd_misses"] += 1
+    store = active_store()
+    if store is not None:
+        t = store.load("simd", key, SimdTable)
+        if t is not None:
+            _SIMD_TABLE_CACHE[key] = t
+            return t
+    _TABLE_CACHE_STATS["simd_builds"] += 1
+    t = _SIMD_TABLE_CACHE[key] = SimdTable(hw, layers)
+    if store is not None:
+        store.save("simd", key, t)
     return t
 
 
-def _build_conv_table(args: Tuple[HardwareSpec, Tuple[ConvLayer, ...]]
-                      ) -> ConvTable:
-    """Worker-process entry point for the parallel table prefetch."""
-    hw, layers = args
+def _build_conv_table(args) -> ConvTable:
+    """Worker-process entry point for the parallel table prefetch.  The
+    optional third element is a fault directive injected (and consumed)
+    on the submission side by ``core.faultinject`` — ``times=N`` there
+    means exactly N poisoned *tasks*, independent of worker count."""
+    hw, layers, directive = args if len(args) == 3 else (*args, None)
+    if directive is not None:
+        kind = directive[0]
+        if kind == "exc":
+            raise RuntimeError("faultinject: injected worker exception")
+        if kind == "crash":
+            os._exit(17)
+        if kind == "hang":
+            time.sleep(directive[1])
     return ConvTable(hw, layers)
 
 
@@ -371,6 +410,21 @@ def batch_build_conv_tables(hws: Sequence[HardwareSpec],
     missing = [(key, hw) for hw in dict.fromkeys(hws)
                if (key := (_conv_hw_key(hw), lpart))
                not in _CONV_TABLE_CACHE]
+    store = active_store()
+    if store is not None and missing:
+        # L2 pass: validated store loads seed the L1 before anything is
+        # rebuilt.  Loaded entries count a miss on first retrieval (the
+        # _PREFETCHED_UNTOUCHED contract), keeping the legacy counters
+        # identical whether the store is on or off.
+        still = []
+        for key, hw in missing:
+            t = store.load("conv", key, ConvTable)
+            if t is None:
+                still.append((key, hw))
+            else:
+                _CONV_TABLE_CACHE[key] = t
+                _PREFETCHED_UNTOUCHED.add(key)
+        missing = still
     if not missing:
         return
     base = missing[0][1]
@@ -401,17 +455,56 @@ def batch_build_conv_tables(hws: Sequence[HardwareSpec],
     # column views into the [n_layers x n_triples] matrices (a few KB per
     # matrix — cheaper than 14 copies per table, and numerically identical)
     for i, (key, _hw) in enumerate(missing):
-        _CONV_TABLE_CACHE[key] = ConvTable._from_columns(
+        t = _CONV_TABLE_CACHE[key] = ConvTable._from_columns(
             phases, {f: mats[f][:, i] for f in f_fields},
             busy[:, i], dram[:, i],
             {buf: sram[buf][:, i] for buf in sram})
         _PREFETCHED_UNTOUCHED.add(key)
         _TABLE_CACHE_STATS["conv_batch_builds"] += 1
+        _TABLE_CACHE_STATS["conv_builds"] += 1
+        if store is not None:
+            store.save("conv", key, t)
+
+
+PREFETCH_TIMEOUT_ENV = "REPRO_DSE_BUILD_TIMEOUT"
+PREFETCH_DEFAULT_TIMEOUT_S = 120.0     # per retry attempt, whole task batch
+PREFETCH_RETRIES = 2                   # re-pool attempts after a failure
+PREFETCH_BACKOFF_S = 0.05              # sleep base between attempts
+
+
+def _fault_directive() -> Optional[tuple]:
+    """Submission-side fault consumption for the parallel build tasks
+    (see ``_build_conv_table``)."""
+    if faultinject.fire("conv_worker_exc"):
+        return ("exc",)
+    if faultinject.fire("conv_worker_crash"):
+        return ("crash",)
+    f = faultinject.fire("conv_worker_hang")
+    if f is not None:
+        return ("hang", f.arg if f.arg is not None else 3600.0)
+    return None
+
+
+def _terminate_pool(pool) -> None:
+    """Best-effort teardown of a pool that may hold hung or dead workers:
+    never join (a hung worker would hang *us* — the failure mode this
+    layer exists to prevent), just cancel and kill."""
+    try:
+        pool.shutdown(wait=False, cancel_futures=True)
+    except Exception:
+        pass
+    for proc in list((getattr(pool, "_processes", None) or {}).values()):
+        try:
+            proc.terminate()
+        except Exception:
+            pass
 
 
 def prefetch_conv_tables(hws: Sequence[HardwareSpec],
                          layers: Sequence[ConvLayer],
-                         workers: int) -> None:
+                         workers: int, *,
+                         timeout_s: Optional[float] = None,
+                         retries: Optional[int] = None) -> None:
     """Build the ConvTables for every hardware variant not already cached,
     fanned out across ``workers`` processes, and seed the shared cache.
 
@@ -424,56 +517,125 @@ def prefetch_conv_tables(hws: Sequence[HardwareSpec],
     prefetched table is accounted as a miss on its first retrieval (not a
     hit), so cache statistics match the serial path exactly; callers with
     ``workers <= 1`` (or a single missing table, or no fork start method)
-    fall back to the vectorized serial build implicitly."""
+    fall back to the vectorized serial build implicitly.
+
+    Fault tolerance: a worker that raises, hard-exits (the pool breaks),
+    or hangs past the per-attempt ``timeout_s`` (default
+    ``$REPRO_DSE_BUILD_TIMEOUT`` or 120 s) can neither poison the cache
+    nor hang the sweep.  Completed tables are salvaged even from a
+    broken or timed-out pool, failed tasks are retried on a fresh pool
+    (``retries`` attempts with linear backoff), and whatever still fails
+    is simply left missing — the caller's ``batch_build_conv_tables``
+    pass rebuilds it serially, so the only cost of any worker fault is
+    wall time.  This function never raises on worker failure."""
+    store = active_store()
     missing = [(key, hw) for hw in dict.fromkeys(hws)
                if (key := _conv_table_key(hw, layers))
-               not in _CONV_TABLE_CACHE]
+               not in _CONV_TABLE_CACHE
+               and not (store is not None and store.contains("conv", key))]
     if workers <= 1 or len(missing) < 2:
         return
-    from concurrent.futures import ProcessPoolExecutor
+    from concurrent.futures import TimeoutError as FutTimeout
+    from concurrent.futures import ProcessPoolExecutor, as_completed
     from multiprocessing import get_context
     try:
         ctx = get_context("fork")      # cheap workers via COW; no re-import
     except ValueError:                 # platform without fork: stay serial
         return
+    if timeout_s is None:
+        timeout_s = env_float(PREFETCH_TIMEOUT_ENV,
+                              PREFETCH_DEFAULT_TIMEOUT_S)
+    if retries is None:
+        retries = PREFETCH_RETRIES
     layers = tuple(layers)
-    n = min(int(workers), len(missing))
-    with ProcessPoolExecutor(max_workers=n, mp_context=ctx) as pool:
-        tables = pool.map(_build_conv_table,
-                          [(hw, layers) for _, hw in missing],
-                          chunksize=max(1, len(missing) // (4 * n)))
-        for (key, _), table in zip(missing, tables):
-            _CONV_TABLE_CACHE[key] = table
-            _PREFETCHED_UNTOUCHED.add(key)
-            _TABLE_CACHE_STATS["conv_parallel_builds"] += 1
+
+    def seed(key: tuple, table: ConvTable) -> None:
+        _CONV_TABLE_CACHE[key] = table
+        _PREFETCHED_UNTOUCHED.add(key)
+        _TABLE_CACHE_STATS["conv_parallel_builds"] += 1
+        _TABLE_CACHE_STATS["conv_builds"] += 1
+        if store is not None:
+            store.save("conv", key, table)
+
+    for attempt in range(retries + 1):
+        n = min(int(workers), len(missing))
+        pool = ProcessPoolExecutor(max_workers=n, mp_context=ctx)
+        futs: Dict[object, Tuple[tuple, HardwareSpec]] = {}
+        failed: List[Tuple[tuple, HardwareSpec]] = []
+        for key, hw in missing:
+            try:
+                futs[pool.submit(_build_conv_table,
+                                 (hw, layers, _fault_directive()))] = (key, hw)
+            except Exception:          # pool already broken mid-submission
+                failed.append((key, hw))
+        pending = dict(futs)
+        try:
+            for fut in as_completed(futs, timeout=timeout_s):
+                key, hw = pending.pop(fut)
+                try:
+                    seed(key, fut.result(timeout=0))
+                except Exception:      # worker exception or broken pool
+                    failed.append((key, hw))
+        except FutTimeout:
+            pass
+        # Salvage: a timeout above abandons the iteration, but tasks that
+        # finished before the deadline still carry valid tables.
+        for fut, (key, hw) in pending.items():
+            if fut.done():
+                try:
+                    seed(key, fut.result(timeout=0))
+                    continue
+                except Exception:
+                    pass
+            else:
+                fut.cancel()
+            failed.append((key, hw))
+        _terminate_pool(pool)
+        missing = failed
+        if not missing:
+            return
+        time.sleep(PREFETCH_BACKOFF_S * (attempt + 1))
+    # retries exhausted: leave the remainder to the caller's guaranteed
+    # serial fallback (batch_build_conv_tables)
 
 
 def table_cache_stats() -> Dict[str, object]:
     """Hit/miss counters plus current entry counts of the shared caches.
     ``by_kind`` nests the same numbers per table kind for dashboards that
-    track conv and simd (and future kinds) separately."""
+    track conv and simd (and future kinds) separately.  The ``store_*``
+    counters come from the persistent L2 (``core.store``): store hits
+    (validated on-disk loads), misses, quarantined corruptions, LRU
+    evictions and lock-wait timeouts; ``conv_builds``/``simd_builds``
+    count actual table constructions across every path, so a warm-store
+    sweep is assertable as "store hits only, zero builds"."""
     stats = dict(_TABLE_CACHE_STATS,
                  conv_entries=len(_CONV_TABLE_CACHE),
                  simd_entries=len(_SIMD_TABLE_CACHE))
+    stats.update(store_stats())
     stats["by_kind"] = {
         "conv": {"hits": stats["conv_hits"], "misses": stats["conv_misses"],
                  "entries": stats["conv_entries"],
+                 "builds": stats["conv_builds"],
                  "parallel_builds": stats["conv_parallel_builds"],
                  "batch_builds": stats["conv_batch_builds"]},
         "simd": {"hits": stats["simd_hits"], "misses": stats["simd_misses"],
-                 "entries": stats["simd_entries"], "parallel_builds": 0,
+                 "entries": stats["simd_entries"],
+                 "builds": stats["simd_builds"], "parallel_builds": 0,
                  "batch_builds": 0},
     }
     return stats
 
 
 def clear_table_caches() -> None:
-    """Drop all cached tables and zero the counters (benchmark fairness)."""
+    """Drop all cached tables and zero the counters (benchmark fairness).
+    The persistent store's *files* are untouched — surviving the death of
+    the in-memory cache is their whole point — but its counters reset."""
     _CONV_TABLE_CACHE.clear()
     _SIMD_TABLE_CACHE.clear()
     _PREFETCHED_UNTOUCHED.clear()
     for k in _TABLE_CACHE_STATS:
         _TABLE_CACHE_STATS[k] = 0
+    reset_store_stats()
 
 
 # ---------------------------------------------------------------------------

@@ -33,28 +33,90 @@ default cycles objective.
 """
 from __future__ import annotations
 
-import os
+import contextlib
+import random
+import zlib
 from dataclasses import dataclass
+from pathlib import Path
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from .backward import expand_training_graph
-from .dse import (BWS, SEARCH_METHODS, SIZES_KB, DSEResult, Layer,
+from .dse import (BWS, SEARCH_METHODS, SIZES_KB, DSEPoint, DSEResult, Layer,
                   clear_table_caches, table_cache_stats)
 from .energy import DEFAULT_ENERGY, EnergyModel
-from .hardware import HardwareSpec
+from .hardware import KB, HardwareSpec
 from .layers import ConvLayer, SimdLayer
 from .objectives import Objective, resolve_objective
+from .store import TableStore, env_int, store_context
 
 WORKERS_ENV = "REPRO_DSE_WORKERS"
+SELFCHECK_ENV = "REPRO_DSE_SELFCHECK"
 
 
 def default_workers() -> int:
     """Worker-process default for parallel table builds: the
-    ``REPRO_DSE_WORKERS`` environment variable, else 0 (serial)."""
-    try:
-        return max(0, int(os.environ.get(WORKERS_ENV, "0")))
-    except ValueError:
-        return 0
+    ``REPRO_DSE_WORKERS`` environment variable, else 0 (serial).  A
+    garbage value warns (``RuntimeWarning`` naming it) and falls back —
+    never a silent serial run."""
+    return max(0, env_int(WORKERS_ENV, 0))
+
+
+def default_selfcheck() -> int:
+    """Self-check sample count default: the ``REPRO_DSE_SELFCHECK``
+    environment variable (candidates cross-validated per search), else 0
+    (off).  Garbage values warn and fall back like ``default_workers``."""
+    return max(0, env_int(SELFCHECK_ENV, 0))
+
+
+class IntegrityError(RuntimeError):
+    """A batched DSE result diverged from the independent scalar walk.
+
+    Raised by the opt-in self-check mode (``REPRO_DSE_SELFCHECK=n`` /
+    ``Study(selfcheck=n)``): the batched cost tables and the scalar
+    reference tiling+simulator path are pinned bit-identical, so any
+    divergence means a corrupted cached table, a poisoned store entry
+    that validated, or a real batched-vs-scalar regression.  Structured
+    fields: ``workload`` (the search key), ``point`` (the diverging
+    ``DSEPoint``), ``expected`` (scalar reference cycles), ``actual``
+    (batched cycles)."""
+
+    def __init__(self, workload: str, point: DSEPoint,
+                 expected: int, actual: int):
+        self.workload = workload
+        self.point = point
+        self.expected = expected
+        self.actual = actual
+        super().__init__(
+            f"DSE self-check failed for workload {workload!r} at "
+            f"sizes_kb={point.sizes_kb} bws={point.bws}: batched path "
+            f"reports {actual} cycles, scalar reference walk reports "
+            f"{expected}")
+
+
+def _reference_point_cycles(hw_base: HardwareSpec,
+                            layers: Sequence[Layer],
+                            point: DSEPoint) -> int:
+    """Independent scalar evaluation of one candidate: reference tiling
+    derivation + per-layer simulator, bypassing every cache and table so
+    a poisoned ``ConvTable``/``SimdTable`` cannot vouch for itself."""
+    from .conv_model import simulate_conv
+    from .simd_model import simulate_simd
+    from .tiling import (derive_conv_tiling_reference,
+                         derive_simd_tiling_reference)
+    wb, ib, ob, vm = point.sizes_kb
+    bw_w, bw_i, bw_o, bw_v = point.bws
+    hw = hw_base.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB,
+                         vmem=vm * KB, bw_w=bw_w, bw_i=bw_i,
+                         bw_o=bw_o, bw_v=bw_v)
+    total = 0
+    for layer in layers:
+        if isinstance(layer, ConvLayer):
+            t = derive_conv_tiling_reference(hw, layer)
+            total += simulate_conv(hw, layer, t).total_cycles
+        else:
+            t = derive_simd_tiling_reference(hw, layer)
+            total += simulate_simd(hw, layer, t).total_cycles
+    return total
 
 
 @dataclass(frozen=True)
@@ -131,7 +193,17 @@ class Study:
     processes, the *many-core* option for very heavy shape unions where
     fork+pickle overhead amortizes; results stay bit-identical either
     way, defaulting to ``$REPRO_DSE_WORKERS``.
+
+    ``store`` pins this study's persistent table store (a ``TableStore``,
+    a directory path, or ``None`` to force the store off even when
+    ``$REPRO_TABLE_STORE`` is set); left at the default, resolution
+    follows the process-wide rules in ``repro.core.store``.
+    ``selfcheck=n`` (default ``$REPRO_DSE_SELFCHECK``, else off)
+    cross-validates n sampled candidates of every search against the
+    scalar reference walk and raises ``IntegrityError`` on divergence.
     """
+
+    _INHERIT = object()          # store default: follow env/global rules
 
     def __init__(self, hw: HardwareSpec, *,
                  sizes: Sequence[int] = SIZES_KB,
@@ -139,6 +211,8 @@ class Study:
                  tol: float = 0.15, lower_bound: bool = True,
                  energy_model: EnergyModel = DEFAULT_ENERGY,
                  workers: Optional[int] = None,
+                 store: Union[TableStore, str, Path, None] = _INHERIT,
+                 selfcheck: Optional[int] = None,
                  methods: Optional[Dict[str, object]] = None):
         self.hw = hw
         self.sizes = tuple(sizes)
@@ -147,6 +221,9 @@ class Study:
         self.lower_bound = lower_bound
         self.energy_model = energy_model
         self.workers = default_workers() if workers is None else int(workers)
+        self.store = store
+        self.selfcheck = default_selfcheck() if selfcheck is None \
+            else max(0, int(selfcheck))
         self._methods = methods
 
     # ---- front-end registry ----------------------------------------------
@@ -189,11 +266,42 @@ class Study:
         nets = {key: as_workload(w).layers()
                 for key, w in workloads.items()}
         fn = self._resolve_method(method)
-        return fn(self.hw, nets, size_budget_kb, bw_budget,
-                  sizes=self.sizes, bws=self.bws, tol=self.tol,
-                  lower_bound=self.lower_bound, refine=refine,
-                  objective=obj, em=self.energy_model,
-                  workers=self.workers)
+        ctx = contextlib.nullcontext() if self.store is Study._INHERIT \
+            else store_context(self.store)
+        with ctx:
+            out = fn(self.hw, nets, size_budget_kb, bw_budget,
+                     sizes=self.sizes, bws=self.bws, tol=self.tol,
+                     lower_bound=self.lower_bound, refine=refine,
+                     objective=obj, em=self.energy_model,
+                     workers=self.workers)
+        if self.selfcheck > 0:
+            for key, res in out.items():
+                self._self_check(key, nets[key], res,
+                                 size_budget_kb, bw_budget)
+        return out
+
+    def _self_check(self, key: str, layers: Sequence[Layer],
+                    res: DSEResult, size_budget_kb: int,
+                    bw_budget: int) -> None:
+        """Cross-validate ``selfcheck`` sampled candidates (plus the
+        winner) of one result against the scalar reference walk.  The
+        sample is deterministic in (workload, budgets), so a divergence
+        reproduces run over run."""
+        if res.grid is not None:
+            count = res.grid.n_candidates
+            candidate = res.grid.point
+        elif res.archive:
+            count = len(res.archive)
+            candidate = res.archive.__getitem__
+        else:
+            return
+        rng = random.Random(zlib.crc32(
+            f"{key}|{size_budget_kb}|{bw_budget}|{count}".encode()))
+        idx = rng.sample(range(count), min(self.selfcheck, count))
+        for point in [candidate(i) for i in idx] + [res.best]:
+            expected = _reference_point_cycles(self.hw, layers, point)
+            if expected != point.cycles:
+                raise IntegrityError(key, point, expected, point.cycles)
 
     def search(self, workload: Union[Workload, str, Sequence[Layer]],
                size_budget_kb: int, bw_budget: int, *,

@@ -40,6 +40,7 @@ and the batch must stay bit-identical to it (asserted per-field in
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from functools import lru_cache
@@ -92,6 +93,51 @@ def _simd_hw_key(hw: HardwareSpec) -> tuple:
 
 def _simd_layer_key(layer: SimdLayer) -> tuple:
     return (layer.h, layer.w, layer.n, layer.c, layer.parts)
+
+
+def stable_key_repr(key) -> str:
+    """Canonical, process-independent serialization of a nested cache key.
+
+    The table/tiling cache keys are nested tuples of ints, bools, floats
+    and strings (hardware invariants, layer shapes, phases), plus frozen
+    dataclasses of the same (the SIMD layer parts).  The persistent
+    table store (``core.store``) content-addresses its entries on this
+    serialization, so it must be byte-stable across processes and Python
+    versions: every leaf is tagged with its type (``True`` and ``1``
+    must not collide) and rendered via ``repr`` (exact for ints and
+    round-trip-exact for floats); dataclasses serialize as their class
+    name plus fields in definition order.  Unsupported leaf types raise
+    ``TypeError`` — an unserializable key must never silently alias."""
+    parts: list = []
+    _stable_key_parts(key, parts)
+    return "".join(parts)
+
+
+def _stable_key_parts(obj, out: list) -> None:
+    if isinstance(obj, tuple):
+        out.append("(")
+        for item in obj:
+            _stable_key_parts(item, out)
+            out.append(",")
+        out.append(")")
+    elif isinstance(obj, bool):            # before int: bool is an int
+        out.append(f"b:{obj!r}")
+    elif isinstance(obj, int):
+        out.append(f"i:{obj!r}")
+    elif isinstance(obj, float):
+        out.append(f"f:{obj!r}")
+    elif isinstance(obj, str):
+        out.append(f"s:{len(obj)}:{obj}")
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        out.append(f"d:{type(obj).__name__}(")
+        for f in dataclasses.fields(obj):
+            _stable_key_parts(getattr(obj, f.name), out)
+            out.append(",")
+        out.append(")")
+    else:
+        raise TypeError(
+            f"cache keys must be nested tuples/dataclasses of "
+            f"int/bool/float/str; got {type(obj).__name__}: {obj!r}")
 
 
 def _align_down(v: int, a: int) -> int:

@@ -19,23 +19,36 @@ from typing import Callable, Optional
 
 
 class Watchdog:
+    """``_fired`` latches once per stall so a hung callback isn't invoked
+    every poll tick, and ``beat()`` re-arms it — a second stall later in
+    the same run fires again instead of being silently absorbed by the
+    first.  The latch and the stop flag are read/written under a lock so
+    ``stop()`` can never race ``_run`` into firing after shutdown."""
+
     def __init__(self, timeout_s: float,
                  on_stall: Callable[[float], None]):
         self.timeout_s = timeout_s
         self.on_stall = on_stall
         self._last = time.monotonic()
         self._stop = threading.Event()
+        self._lock = threading.Lock()
         self._fired = False
         self._thread: Optional[threading.Thread] = None
 
     def beat(self) -> None:
-        self._last = time.monotonic()
+        with self._lock:
+            self._last = time.monotonic()
+            self._fired = False          # re-arm: detect the *next* stall too
 
     def _run(self) -> None:
         while not self._stop.wait(self.timeout_s / 10):
-            idle = time.monotonic() - self._last
-            if idle > self.timeout_s and not self._fired:
-                self._fired = True
+            with self._lock:
+                idle = time.monotonic() - self._last
+                fire = (idle > self.timeout_s and not self._fired
+                        and not self._stop.is_set())
+                if fire:
+                    self._fired = True
+            if fire:
                 self.on_stall(idle)
 
     def start(self) -> "Watchdog":
@@ -44,7 +57,8 @@ class Watchdog:
         return self
 
     def stop(self) -> None:
-        self._stop.set()
+        with self._lock:
+            self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=1.0)
 

@@ -28,3 +28,28 @@ def test_fires_once():
     with wd:
         time.sleep(0.45)
     assert len(fired) == 1
+
+
+def test_beat_rearms_for_second_stall():
+    """A beat after a stall re-arms the latch: a later second stall in
+    the same run fires again instead of being silently absorbed."""
+    fired = []
+    wd = Watchdog(timeout_s=0.1, on_stall=lambda idle: fired.append(idle))
+    with wd:
+        time.sleep(0.3)              # first stall
+        assert len(fired) == 1
+        wd.beat()                    # recovery heartbeat
+        time.sleep(0.3)              # second stall
+    assert len(fired) == 2
+
+
+def test_no_fire_after_stop():
+    """stop() closes the race with _run: once stopped, the callback can
+    never fire even if the run was mid-stall."""
+    fired = []
+    wd = Watchdog(timeout_s=0.05, on_stall=lambda idle: fired.append(idle))
+    wd.start()
+    wd.stop()
+    n = len(fired)
+    time.sleep(0.3)
+    assert len(fired) == n

@@ -1,0 +1,175 @@
+"""Deterministic fault injection and the recovery paths it exercises.
+
+Every injected fault — worker exception, hard worker crash
+(``BrokenProcessPool``), build hang past the per-attempt timeout, store
+corruption/truncation at write time, held advisory lock — must be
+recovered without a crash or hang and yield bit-identical DSE results to
+the fault-free run."""
+import numpy as np
+import pytest
+
+from repro.core import INFER_PRESETS
+from repro.core import faultinject
+from repro.core.dse import clear_table_caches, table_cache_stats
+from repro.core.layers import ConvLayer, fc, pool, relu
+from repro.core.store import TableStore, clear_default_store
+from repro.core.study import Study, Workload
+
+HW = INFER_PRESETS[16]
+GRID = (32, 64, 128, 256)
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def tiny_net():
+    return [
+        _conv("c1"),
+        relu("r1", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32, has_bias=False),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        fc("fc", 1, 2048, 100),
+    ]
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    faultinject.reset()
+    clear_default_store()
+    clear_table_caches()
+    yield
+    faultinject.reset()
+    clear_default_store()
+    clear_table_caches()
+
+
+def _sweep(**kw):
+    return Study(HW, sizes=GRID, bws=GRID, tol=0.5, **kw).search(
+        Workload(net=tuple(tiny_net())), 256, 256)
+
+
+# ---- the harness itself ----------------------------------------------------
+
+def test_arm_fire_consume():
+    assert faultinject.fire("conv_worker_exc") is None      # inert unarmed
+    faultinject.arm("conv_worker_exc", times=2)
+    assert faultinject.armed("conv_worker_exc")
+    assert faultinject.fire("conv_worker_exc") is not None
+    assert faultinject.fire("conv_worker_exc") is not None
+    assert faultinject.fire("conv_worker_exc") is None      # exhausted
+    assert faultinject.fired("conv_worker_exc") == 2
+
+
+def test_always_fire_and_arg():
+    faultinject.arm("conv_worker_hang", times=-1, arg=7.5)
+    for _ in range(5):
+        f = faultinject.fire("conv_worker_hang")
+        assert f is not None and f.arg == 7.5
+    assert faultinject.fired("conv_worker_hang") == 5
+
+
+def test_load_env_parses_spec():
+    faultinject.load_env("conv_worker_crash:2,store_corrupt,"
+                         "conv_worker_hang:1:30")
+    assert faultinject.armed("conv_worker_crash")
+    assert faultinject.armed("store_corrupt")
+    f = faultinject.fire("conv_worker_hang")
+    assert f is not None and f.arg == 30.0
+
+
+def test_load_env_warns_on_malformed():
+    with pytest.warns(RuntimeWarning, match="REPRO_FAULTS.*bogus:xx"):
+        faultinject.load_env("bogus:xx,store_corrupt:1")
+    assert not faultinject.armed("bogus")
+    assert faultinject.armed("store_corrupt")       # good items still arm
+
+
+# ---- parallel-build recovery ----------------------------------------------
+
+@pytest.mark.parametrize("point", ["conv_worker_exc", "conv_worker_crash"])
+def test_worker_failure_recovers_bit_identical(point):
+    serial = _sweep(workers=0)
+    n_tables = table_cache_stats()["conv_builds"]
+    clear_table_caches()
+    faultinject.arm(point, times=2)
+    res = _sweep(workers=2)
+    assert faultinject.fired(point) == 2
+    assert (res.grid.costs == serial.grid.costs).all()
+    assert res.best == serial.best
+    # the cache ended consistent: every table built exactly once, across
+    # the surviving parallel attempts plus the salvage/fallback path
+    assert table_cache_stats()["conv_builds"] == n_tables
+
+
+def test_worker_hang_trips_timeout_and_recovers(monkeypatch):
+    serial = _sweep(workers=0)
+    clear_table_caches()
+    monkeypatch.setenv("REPRO_DSE_BUILD_TIMEOUT", "2.0")
+    faultinject.arm("conv_worker_hang", times=1, arg=60)
+    res = _sweep(workers=2)
+    assert faultinject.fired("conv_worker_hang") == 1
+    assert (res.grid.costs == serial.grid.costs).all()
+    assert res.best == serial.best
+
+
+def test_worker_failure_then_serial_fallback_exhausts_retries():
+    """With a fault armed on *every* parallel task, all retries burn out
+    and the guaranteed serial fallback still completes the sweep."""
+    serial = _sweep(workers=0)
+    clear_table_caches()
+    faultinject.arm("conv_worker_exc", times=-1)
+    res = _sweep(workers=2)
+    assert (res.grid.costs == serial.grid.costs).all()
+    st = table_cache_stats()
+    assert st["conv_parallel_builds"] == 0          # nothing survived
+    assert st["conv_builds"] > 0                    # serial built them all
+
+
+# ---- store-fault recovery --------------------------------------------------
+
+@pytest.mark.parametrize("point", ["store_corrupt", "store_truncate"])
+def test_store_damage_at_write_recovers(tmp_path, point):
+    baseline = _sweep()
+    clear_table_caches()
+    store = TableStore(tmp_path)
+    faultinject.arm(point, times=1)
+    cold = _sweep(store=store)                      # one entry damaged
+    assert faultinject.fired(point) == 1
+    assert (cold.grid.costs == baseline.grid.costs).all()
+    clear_table_caches()
+    warm = _sweep(store=store)                      # damage found on load
+    st = table_cache_stats()
+    assert st["store_corrupt"] == 1
+    assert (warm.grid.costs == baseline.grid.costs).all()
+    clear_table_caches()
+    _sweep(store=store)                             # rebuilt entry persisted
+    assert table_cache_stats()["store_corrupt"] == 0
+
+
+def test_lock_hold_degrades_without_deadlock(tmp_path):
+    """A writer sitting on the advisory lock delays other writers at
+    most ``lock_timeout_s``; they proceed unlocked and stay correct."""
+    import threading
+    import time
+    slow = TableStore(tmp_path, lock_timeout_s=0.2)
+    fast = TableStore(tmp_path, lock_timeout_s=0.2)
+    faultinject.arm("store_lock_hold", times=1, arg=1.0)
+
+    t = threading.Thread(
+        target=lambda: slow.save("conv", ("slow",), b"x" * 64))
+    t.start()
+    time.sleep(0.3)                                 # let it take the lock
+    t0 = time.monotonic()
+    fast.save("conv", ("fast",), b"y" * 64)
+    elapsed = time.monotonic() - t0
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert elapsed < 0.8                            # bounded, no deadlock
+    from repro.core.store import store_stats
+    assert store_stats()["store_lock_timeouts"] >= 1
+    assert fast.load("conv", ("fast",), bytes) == b"y" * 64
+    assert slow.load("conv", ("slow",), bytes) == b"x" * 64

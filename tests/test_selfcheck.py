@@ -1,0 +1,98 @@
+"""The opt-in DSE self-check mode (``REPRO_DSE_SELFCHECK`` /
+``Study(selfcheck=n)``).
+
+The batched cost tables and the scalar reference tiling+simulator walk
+are pinned bit-identical, so the self-check must pass silently on clean
+runs (grid and refine) and convert a deliberately perturbed cached table
+— the repo's biggest silent-failure risk — into a structured, loud
+``IntegrityError``."""
+import pytest
+
+from repro.core import INFER_PRESETS
+from repro.core.dse import _CONV_TABLE_CACHE, clear_table_caches
+from repro.core.layers import ConvLayer, fc, pool, relu
+from repro.core.study import IntegrityError, Study, Workload
+
+HW = INFER_PRESETS[16]
+GRID = (32, 64, 128, 256)
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def tiny_net():
+    return [
+        _conv("c1"),
+        relu("r1", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32, has_bias=False),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        fc("fc", 1, 2048, 100),
+    ]
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    clear_table_caches()
+    yield
+    clear_table_caches()
+
+
+WL = Workload(net=tuple(tiny_net()))
+
+
+def _study(**kw):
+    return Study(HW, sizes=GRID, bws=GRID, tol=0.5, **kw)
+
+
+def test_clean_grid_passes():
+    res = _study(selfcheck=5).search(WL, 256, 256)
+    assert res.best.cycles > 0                 # reached the result at all
+
+
+def test_clean_refine_passes():
+    res = _study(selfcheck=5).search(WL, 256, 256, method="refine")
+    assert res.best.cycles > 0
+
+
+def test_clean_training_grid_passes():
+    from repro.core.layers import batch_norm
+    net = [_conv("c1", has_bias=False), batch_norm("bn", 16, 16, 1, 32),
+           relu("r", 16, 16, 1, 32), fc("fc", 1, 8192, 10)]
+    res = _study(selfcheck=3).search(
+        Workload(net=tuple(net), training=True), 256, 256)
+    assert res.best.cycles > 0
+
+
+def test_perturbed_table_raises_integrity_error():
+    _study().search(WL, 256, 256)              # warm the table cache
+    for t in _CONV_TABLE_CACHE.values():       # silent drift, every table
+        t.o1[:] = t.o1 + 1000
+    with pytest.raises(IntegrityError) as ei:
+        _study(selfcheck=3).search(WL, 256, 256)
+    err = ei.value
+    assert err.workload == WL.label
+    assert err.expected != err.actual
+    assert len(err.point.sizes_kb) == 4 and len(err.point.bws) == 4
+    assert str(err.expected) in str(err) and str(err.actual) in str(err)
+
+
+def test_selfcheck_off_by_default_misses_perturbation():
+    """Documents the trade: without selfcheck the drift is silent —
+    exactly why the mode exists."""
+    _study().search(WL, 256, 256)
+    for t in _CONV_TABLE_CACHE.values():
+        t.o1[:] = t.o1 + 1000
+    _study().search(WL, 256, 256)              # no raise
+
+
+def test_sampling_is_deterministic():
+    """Same workload + budgets -> same sampled candidates, so a failure
+    reproduces run over run; exercised via two identical clean runs."""
+    s = _study(selfcheck=4)
+    r1 = s.search(WL, 256, 256)
+    r2 = s.search(WL, 256, 256)
+    assert r1.best == r2.best

@@ -1,0 +1,275 @@
+"""The crash-safe persistent table store (``repro.core.store``).
+
+Pins the durability contract: content-addressed atomic writes round-trip
+bit-identically, corruption/truncation quarantines and rebuilds (never a
+crash), the store is inert unless explicitly enabled, bad configuration
+warns instead of silently disabling, eviction respects the size cap, and
+a warm store lets a *fresh process* run a full sweep rebuilding zero
+tables with results bit-identical to the no-store path."""
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import INFER_PRESETS
+from repro.core.dse import clear_table_caches, table_cache_stats
+from repro.core.layers import ConvLayer, fc, pool, relu
+from repro.core.store import (TableStore, active_store, clear_default_store,
+                              reset_store_stats, set_default_store,
+                              store_context, store_stats)
+from repro.core.study import Study, Workload
+
+HW = INFER_PRESETS[16]
+GRID = (32, 64, 128, 256)
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def tiny_net():
+    return [
+        _conv("c1"),
+        relu("r1", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32, has_bias=False),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        fc("fc", 1, 2048, 100),
+    ]
+
+
+@pytest.fixture(autouse=True)
+def _clean_store_state():
+    clear_default_store()
+    clear_table_caches()
+    yield
+    clear_default_store()
+    clear_table_caches()
+
+
+def _study(**kw):
+    return Study(HW, sizes=GRID, bws=GRID, tol=0.5, **kw)
+
+
+def _sweep(**kw):
+    return _study(**kw).search(Workload(net=tuple(tiny_net())), 256, 256)
+
+
+# ---- raw store semantics ---------------------------------------------------
+
+def test_roundtrip_bit_identical(tmp_path):
+    store = TableStore(tmp_path)
+    key = (("hw", 1, 2), (("layer", 3), "fwd"))
+    obj = {"a": np.arange(7, dtype=np.int64), "b": (1, 2.5, "x")}
+    store.save("conv", key, obj)
+    assert store.contains("conv", key)
+    back = store.load("conv", key, dict)
+    assert back["b"] == obj["b"]
+    assert (back["a"] == obj["a"]).all()
+    assert back["a"].dtype == obj["a"].dtype
+
+
+def test_miss_and_type_guard(tmp_path):
+    store = TableStore(tmp_path)
+    reset_store_stats()
+    assert store.load("conv", ("nope",)) is None
+    assert store_stats()["store_misses"] == 1
+    store.save("conv", ("k",), [1, 2])
+    # wrong expected type quarantines rather than returning garbage
+    assert store.load("conv", ("k",), dict) is None
+    assert store_stats()["store_corrupt"] == 1
+
+
+@pytest.mark.parametrize("damage", ["flip", "truncate", "empty"])
+def test_corruption_quarantines_not_crashes(tmp_path, damage):
+    store = TableStore(tmp_path)
+    key = (("hw",), ("l1",))
+    store.save("conv", key, list(range(100)))
+    path = store.entry_path("conv", key)
+    blob = path.read_bytes()
+    if damage == "flip":
+        i = len(blob) // 2
+        path.write_bytes(blob[:i] + bytes([blob[i] ^ 0xFF]) + blob[i + 1:])
+    elif damage == "truncate":
+        path.write_bytes(blob[:len(blob) // 2])
+    else:
+        path.write_bytes(b"")
+    reset_store_stats()
+    assert store.load("conv", key, list) is None
+    assert store_stats()["store_corrupt"] == 1
+    assert not path.exists()                       # quarantined away
+    assert list(store.quarantine_dir.iterdir())
+    # a rebuild + save restores service
+    store.save("conv", key, list(range(100)))
+    assert store.load("conv", key, list) == list(range(100))
+
+
+def test_key_mismatch_is_corruption(tmp_path):
+    """A file renamed onto another key's address must not be served."""
+    store = TableStore(tmp_path)
+    store.save("conv", ("k1",), "v1")
+    store.save("conv", ("k2",), "v2")
+    os.replace(store.entry_path("conv", ("k1",)),
+               store.entry_path("conv", ("k2",)))
+    assert store.load("conv", ("k2",), str) is None
+    assert store_stats()["store_corrupt"] >= 1
+
+
+def test_eviction_respects_cap(tmp_path):
+    store = TableStore(tmp_path, cap_bytes=1)       # everything over cap
+    reset_store_stats()
+    for i in range(5):
+        store.save("conv", (f"k{i}",), b"x" * 256)
+    assert store.total_bytes() <= 1                 # cap enforced
+    assert store_stats()["store_evicted"] == 5
+
+
+def test_lru_evicts_oldest_first(tmp_path):
+    store = TableStore(tmp_path, cap_bytes=10 ** 9)
+    for i in range(4):
+        store.save("conv", (f"k{i}",), b"x" * 100)
+        os.utime(store.entry_path("conv", (f"k{i}",)), (i, i))
+    store.load("conv", ("k0",), bytes)        # refresh k0's recency
+    store.cap_bytes = 250                      # room for ~2 entries
+    store._evict_to_cap()
+    assert store.contains("conv", ("k0",))     # recently used: kept
+    assert not store.contains("conv", ("k1",))  # oldest untouched: evicted
+
+
+# ---- activation rules ------------------------------------------------------
+
+def test_disabled_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_TABLE_STORE", raising=False)
+    assert active_store() is None
+
+
+def test_env_and_override_precedence(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TABLE_STORE", str(tmp_path / "env"))
+    assert active_store() is not None
+    assert active_store().root == tmp_path / "env"
+    with store_context(None):                  # explicit off beats env
+        assert active_store() is None
+    override = TableStore(tmp_path / "override")
+    set_default_store(override)
+    assert active_store() is override
+    clear_default_store()
+    assert active_store().root == tmp_path / "env"
+
+
+def test_bad_env_path_warns_once(tmp_path, monkeypatch):
+    bad = tmp_path / "file-not-dir"
+    bad.write_text("not a directory")
+    monkeypatch.setenv("REPRO_TABLE_STORE", str(bad))
+    with pytest.warns(RuntimeWarning, match="REPRO_TABLE_STORE"):
+        assert active_store() is None
+    with warnings.catch_warnings():            # second resolution: silent
+        warnings.simplefilter("error")
+        assert active_store() is None
+
+
+def test_bad_cap_env_warns(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TABLE_STORE_CAP_MB", "huge")
+    with pytest.warns(RuntimeWarning, match="REPRO_TABLE_STORE_CAP_MB"):
+        store = TableStore(tmp_path)
+    assert store.cap_bytes == 2048 * 1024 * 1024
+
+
+# ---- end-to-end through the DSE engine -------------------------------------
+
+def test_store_sweep_bit_identical_and_warm(tmp_path):
+    baseline = _sweep()                         # no store
+
+    clear_table_caches()
+    cold = _sweep(store=tmp_path / "store")
+    st = table_cache_stats()
+    assert (cold.grid.costs == baseline.grid.costs).all()
+    assert cold.best == baseline.best
+    assert st["store_hits"] == 0
+    assert st["store_writes"] == st["conv_builds"] + st["simd_builds"] > 0
+
+    clear_table_caches()                        # drop L1, keep the store
+    warm = _sweep(store=tmp_path / "store")
+    st = table_cache_stats()
+    assert (warm.grid.costs == baseline.grid.costs).all()
+    assert warm.best == baseline.best
+    assert st["conv_builds"] == 0 and st["simd_builds"] == 0
+    assert st["store_misses"] == 0 and st["store_hits"] > 0
+
+
+def test_legacy_counters_identical_with_store(tmp_path):
+    """The L1 counter stream (conv_hits/conv_misses/...) is the pinned
+    public story; seeding L1 from the store must not change it."""
+    _sweep()
+    plain = {k: v for k, v in table_cache_stats().items()
+             if k in ("conv_hits", "conv_misses", "simd_hits",
+                      "simd_misses", "conv_tilings_derived")}
+    clear_table_caches()
+    _sweep(store=tmp_path / "s")
+    clear_table_caches()
+    _sweep(store=tmp_path / "s")                # warm: loads, not builds
+    stored = {k: v for k, v in table_cache_stats().items() if k in plain}
+    assert stored == plain
+
+
+def test_corrupt_store_entry_recovers_through_sweep(tmp_path):
+    store = TableStore(tmp_path)
+    _sweep(store=store)
+    victim = sorted(store.entries())[0]
+    blob = victim.read_bytes()
+    victim.write_bytes(blob[:40] + b"\x00garbage\x00" + blob[48:])
+    clear_table_caches()
+    res = _sweep(store=store)
+    st = table_cache_stats()
+    assert st["store_corrupt"] == 1
+    baseline = _sweep()                        # fresh no-store reference
+    assert (res.grid.costs == baseline.grid.costs).all()
+    # the rebuilt entry was re-persisted: next run is fully warm again
+    clear_table_caches()
+    _sweep(store=store)
+    st = table_cache_stats()
+    assert st["store_corrupt"] == 0 and st["conv_builds"] == 0
+
+
+def test_warm_store_fresh_process_rebuilds_zero(tmp_path):
+    """Acceptance pin: a Table VIII style sweep in a *fresh process* over
+    a warm store rebuilds zero tables and matches bit-identically."""
+    res = _sweep(store=tmp_path / "store")
+    want = [int(res.best.cycles), res.grid.costs.sum().item()]
+
+    code = f"""
+import json, sys
+from repro.core import INFER_PRESETS
+from repro.core.study import Study, Workload
+from repro.core.dse import table_cache_stats
+from repro.core.layers import ConvLayer, fc, pool, relu
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+net = [_conv("c1"), relu("r1", 16, 16, 1, 32),
+       _conv("c2", ic=32, oc=32, has_bias=False),
+       pool("p1", 8, 8, 1, 32, 2, 2), fc("fc", 1, 2048, 100)]
+res = Study(INFER_PRESETS[16], sizes=(32, 64, 128, 256),
+            bws=(32, 64, 128, 256), tol=0.5,
+            store={str(tmp_path / "store")!r}) \\
+    .search(Workload(net=tuple(net)), 256, 256)
+st = table_cache_stats()
+assert st["conv_builds"] == 0 and st["simd_builds"] == 0, st
+assert st["store_misses"] == 0 and st["store_hits"] > 0, st
+print(json.dumps([int(res.best.cycles), res.grid.costs.sum().item()]))
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600,
+                         env={**os.environ, "PYTHONPATH": "src"},
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr
+    import json
+    assert json.loads(out.stdout.strip().splitlines()[-1]) == want

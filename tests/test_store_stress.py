@@ -1,0 +1,99 @@
+"""Concurrent-access stress: N processes hammering one store directory.
+
+Several fresh processes run overlapping sweeps (shared + private layer
+shapes) against the same store root at once.  The contract under
+contention is: every process exits cleanly with bit-identical results,
+the store ends with only valid entries (no stray tempfiles, nothing
+quarantined by racing writers), and a follow-up warm run rebuilds
+nothing."""
+import json
+import os
+import subprocess
+import sys
+
+from repro.core import INFER_PRESETS
+from repro.core.dse import clear_table_caches, table_cache_stats
+from repro.core.layers import ConvLayer, fc, pool, relu
+from repro.core.store import TableStore, clear_default_store
+from repro.core.study import Study, Workload
+
+N_PROCS = 4
+
+WORKER = """
+import json, sys
+from repro.core import INFER_PRESETS
+from repro.core.study import Study, Workload
+from repro.core.layers import ConvLayer, fc, pool, relu
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+rank = int(sys.argv[1])
+# shared prefix (every process races on these keys) + one private shape
+net = [_conv("c1"), relu("r1", 16, 16, 1, 32),
+       _conv("c2", ic=32, oc=32, has_bias=False),
+       pool("p1", 8, 8, 1, 32, 2, 2),
+       _conv("mine", oc=32 + 16 * (rank % 2)),
+       fc("fc", 1, 2048, 100)]
+res = Study(INFER_PRESETS[16], sizes=(32, 64, 128, 256),
+            bws=(32, 64, 128, 256), tol=0.5, store=sys.argv[2]) \\
+    .search(Workload(net=tuple(net)), 256, 256)
+print(json.dumps([rank % 2, int(res.best.cycles),
+                  res.grid.costs.sum().item()]))
+"""
+
+
+def test_concurrent_processes_share_one_store(tmp_path):
+    root = tmp_path / "store"
+    env = {**os.environ, "PYTHONPATH": "src"}
+    cwd = os.path.dirname(os.path.dirname(__file__))
+    procs = [subprocess.Popen([sys.executable, "-c", WORKER, str(i),
+                               str(root)],
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True,
+                              env=env, cwd=cwd)
+             for i in range(N_PROCS)]
+    results = {}
+    for i, p in enumerate(procs):
+        out, err = p.communicate(timeout=600)
+        assert p.returncode == 0, f"rank {i}: {err}"
+        variant, best, total = json.loads(out.strip().splitlines()[-1])
+        # same-variant processes raced on identical keys: results must
+        # agree bit for bit no matter who won each write
+        assert results.setdefault(variant, (best, total)) == (best, total)
+    assert set(results) == {0, 1}
+
+    # the store ended clean: no temp debris, no quarantined files, and
+    # every surviving entry validates
+    store = TableStore(root)
+    assert not list(root.glob(".tmp-*"))
+    assert not (store.quarantine_dir.exists()
+                and list(store.quarantine_dir.iterdir()))
+    assert len(list(store.entries())) > 0
+
+    # a warm in-process run over the shared shapes rebuilds nothing
+    clear_default_store()
+    clear_table_caches()
+
+    def _conv(name, **kw):
+        base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16,
+                    ow=16, kh=3, kw=3, s=1, has_bias=True)
+        base.update(kw)
+        return ConvLayer(**base)
+
+    net = [_conv("c1"), relu("r1", 16, 16, 1, 32),
+           _conv("c2", ic=32, oc=32, has_bias=False),
+           pool("p1", 8, 8, 1, 32, 2, 2), _conv("mine", oc=32),
+           fc("fc", 1, 2048, 100)]
+    res = Study(INFER_PRESETS[16], sizes=(32, 64, 128, 256),
+                bws=(32, 64, 128, 256), tol=0.5, store=store) \
+        .search(Workload(net=tuple(net)), 256, 256)
+    st = table_cache_stats()
+    assert st["conv_builds"] == 0 and st["simd_builds"] == 0, st
+    assert st["store_corrupt"] == 0
+    assert (int(res.best.cycles), res.grid.costs.sum().item()) \
+        == tuple(results[0])
+    clear_table_caches()

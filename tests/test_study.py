@@ -240,9 +240,23 @@ def test_default_workers_env(monkeypatch):
     assert default_workers() == 3
     assert Study(HW16).workers == 3
     monkeypatch.setenv("REPRO_DSE_WORKERS", "junk")
-    assert default_workers() == 0
+    with pytest.warns(RuntimeWarning, match="REPRO_DSE_WORKERS.*junk"):
+        assert default_workers() == 0
     monkeypatch.delenv("REPRO_DSE_WORKERS")
     assert Study(HW16, workers=5).workers == 5
+
+
+def test_default_selfcheck_env(monkeypatch):
+    from repro.core.study import default_selfcheck
+    assert default_selfcheck() == 0          # off unless asked for
+    monkeypatch.setenv("REPRO_DSE_SELFCHECK", "4")
+    assert default_selfcheck() == 4
+    assert Study(HW16).selfcheck == 4
+    monkeypatch.setenv("REPRO_DSE_SELFCHECK", "many")
+    with pytest.warns(RuntimeWarning, match="REPRO_DSE_SELFCHECK.*many"):
+        assert default_selfcheck() == 0
+    monkeypatch.delenv("REPRO_DSE_SELFCHECK")
+    assert Study(HW16, selfcheck=2).selfcheck == 2
 
 
 def test_cross_objective_sweep_rebuilds_nothing():
