@@ -14,9 +14,19 @@ build phases upstream of the grid reduction:
     scalar-derived tilings vs ``batch_build_conv_tables``'s one
     vectorized pass per layer.  Tables are asserted field-identical, and
     the speedup is asserted >= 3x (the PR 5 acceptance bar).
+  * ``grid_eval``      — the grid *reductions* on warm tables: the host
+    numpy tensor path vs the on-device backends (``repro.core.gridax``
+    jit/vmap, and the fused Pallas outer-add+argmin kernel), plus the
+    sequential host Pareto walk vs the vectorized device mask.  Every
+    backend's best/worst/frontier/Pareto is asserted bit-identical; the
+    >= 5x backend speedup bar is asserted on real accelerators only (on
+    CPU the int64 reductions are memory-bound and XLA's multi-key sort
+    trails numpy's, so CI asserts correctness in interpret mode and an
+    absolute >10M cands/s floor instead).
 
 Tiling and table caches are cleared before every timed run so no path
-inherits another's warm state.
+inherits another's warm state (``grid_eval`` deliberately runs warm:
+it times reductions, not builds).
 """
 from __future__ import annotations
 
@@ -189,5 +199,101 @@ def run() -> List[str]:
         rows.append(row(
             f"dse_scaling.tensor.{budget}", us_new,
             f"cands={n};cands_per_s={n / (us_new / 1e6):.0f}"))
+
+    # ---- grid_eval: host reduction vs on-device jit/vmap vs fused ---------
+    rows.extend(_grid_eval_rows(hw, net))
     _clear_caches()
+    return rows
+
+
+def _grid_eval_rows(hw, net) -> List[str]:
+    """Time the table8 grid reductions themselves (tables warm) on every
+    backend and assert them bit-identical; see module docstring for the
+    speedup-bar policy."""
+    import jax
+
+    from repro.core import gridax
+    from repro.core.dse import (_EnergyFields, _pareto_mask, FRONTIER_FRAC)
+    from repro.core.energy import DEFAULT_ENERGY
+
+    rows: List[str] = []
+    lattice = (32, 64, 128, 256, 512, 1024, 2048)
+    size_tuples = _tuples(lattice, 4, TABLE8_BUDGET * 0.85,
+                          TABLE8_BUDGET * 1.15)
+    bw_tuples = _tuples(lattice, 4, TABLE8_BUDGET * 0.85,
+                        TABLE8_BUDGET * 1.15)
+    s3s, s3_of = _project(size_tuples, lambda t: t[:3])
+    vs, v_of = _project(size_tuples, lambda t: t[3])
+    b3s, b3_of = _project(bw_tuples, lambda t: t[:3])
+    ws, w_of = _project(bw_tuples, lambda t: t[3])
+    eng = _GridEngine(hw, {"net": net})
+    conv_mats, _, conv_e = eng.conv_matrices(s3s, b3s)
+    simd_mats, _, simd_e = eng.simd_matrices(vs, ws)
+    conv, simd = conv_mats["net"], simd_mats["net"]
+    mult = 1.0 + FRONTIER_FRAC
+    n = len(size_tuples) * len(bw_tuples)
+    on_accelerator = jax.default_backend() in ("tpu", "gpu")
+
+    def best_of(fn, reps=3):
+        us = min(timed(fn)[0] for _ in range(reps))
+        return us, fn()
+
+    def numpy_reduce():
+        costs = conv[np.ix_(s3_of, b3_of)] + simd[np.ix_(v_of, w_of)]
+        flat = costs.ravel()
+        bi = int(flat.argmin())
+        return costs, bi, int(flat.argmax()), flat <= flat[bi] * mult
+
+    def jit_reduce():
+        return gridax.reduce_cycles_many([conv], [simd], s3_of, b3_of,
+                                         v_of, w_of, frontier_mult=mult)[0]
+
+    def fused_reduce():
+        return gridax.reduce_cycles_many([conv], [simd], s3_of, b3_of,
+                                         v_of, w_of, frontier_mult=mult,
+                                         fused=True)[0]
+
+    us_np, (costs, bi, wi, fm) = best_of(numpy_reduce)
+    us_jit, (cj, bj, wj, fj) = best_of(jit_reduce)
+    us_fused, (cf, bf, wf, ff) = best_of(fused_reduce)
+    for label, (c2, b2, w2, f2) in (("jit", (cj, bj, wj, fj)),
+                                    ("fused", (cf, bf, wf, ff))):
+        assert (b2, w2) == (bi, wi), label
+        assert np.array_equal(c2, costs) and np.array_equal(f2, fm), label
+
+    speedup = us_np / us_jit
+    rows.append(row("dse_scaling.grid_eval.numpy", us_np,
+                    f"cands={n};cands_per_s={n / (us_np / 1e6):.0f}"))
+    rows.append(row(
+        "dse_scaling.grid_eval.jit", us_jit,
+        f"cands={n};cands_per_s={n / (us_jit / 1e6):.0f};"
+        f"speedup={speedup:.2f}x;backend={jax.default_backend()}"))
+    rows.append(row(
+        "dse_scaling.grid_eval.fused", us_fused,
+        f"cands={n};cands_per_s={n / (us_fused / 1e6):.0f};"
+        f"interpret={not on_accelerator}"))
+    if on_accelerator:
+        assert speedup >= 5.0, \
+            f"grid_eval jit speedup {speedup:.2f}x < 5x on accelerator"
+    else:
+        # CPU floor: both paths must clear the >10M cands/s target
+        assert n / (us_np / 1e6) > 10e6 and n / (us_jit / 1e6) > 10e6
+
+    # ---- Pareto: sequential host walk vs vectorized device mask ----------
+    energy = _EnergyFields(hw=hw, em=DEFAULT_ENERGY, conv=conv_e["net"],
+                           simd=simd_e["net"], s3_of=s3_of, v_of=v_of,
+                           sizes_kb=np.array(size_tuples, dtype=np.int64))
+    e_total = energy.grids(costs)["E_total"].ravel()
+    flat = costs.ravel()
+    us_ploop, pm_np = best_of(lambda: _pareto_mask(flat, e_total))
+    us_pjit, pm_dev = best_of(lambda: gridax.pareto_mask(flat, e_total))
+    assert np.array_equal(pm_np, pm_dev)
+    rows.append(row("dse_scaling.grid_eval.pareto_loop", us_ploop,
+                    f"cands={n};front={int(pm_np.sum())}"))
+    rows.append(row(
+        "dse_scaling.grid_eval.pareto_dev", us_pjit,
+        f"cands={n};front={int(pm_dev.sum())};"
+        f"speedup={us_ploop / us_pjit:.2f}x"))
+    if on_accelerator:
+        assert us_ploop / us_pjit >= 5.0
     return rows

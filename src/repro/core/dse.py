@@ -110,6 +110,51 @@ BWS = (32, 64, 128, 256, 512, 1024, 2048)
 
 FRONTIER_FRAC = 0.15          # paper's "economic design" band (Table X)
 
+BACKEND_ENV = "REPRO_DSE_BACKEND"
+# Grid-evaluation backends of the exhaustive front-end: host numpy (the
+# default and the reference), on-device jit/vmap reductions, and the
+# jit/vmap path with best/worst routed through the fused Pallas
+# outer-add+argmin kernel (``repro.core.gridax``).  All three are pinned
+# bit-identical.
+DSE_BACKENDS = ("numpy", "jax", "jax-fused")
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    """``None`` -> ``$REPRO_DSE_BACKEND`` (else ``"numpy"``); a known
+    name passes through.  An unknown explicit argument raises; a garbage
+    environment value warns (``RuntimeWarning`` naming it) and falls
+    back to numpy — never a silent behavior change."""
+    if backend is not None:
+        if backend not in DSE_BACKENDS:
+            raise ValueError(f"unknown DSE backend {backend!r}; "
+                             f"known: {', '.join(DSE_BACKENDS)}")
+        return backend
+    val = os.environ.get(BACKEND_ENV)
+    if not val:
+        return "numpy"
+    if val not in DSE_BACKENDS:
+        import warnings
+        warnings.warn(
+            f"ignoring garbage {BACKEND_ENV}={val!r} "
+            f"(known: {', '.join(DSE_BACKENDS)}); using 'numpy'",
+            RuntimeWarning, stacklevel=2)
+        return "numpy"
+    return val
+
+
+def _load_gridax(backend: str):
+    """Import the JAX backend on demand (keeps ``import repro.core.dse``
+    jax-free for numpy-only use), with a pointed error if jax is absent
+    or broken in this environment."""
+    try:
+        from . import gridax
+    except Exception as e:                       # pragma: no cover
+        raise RuntimeError(
+            f"DSE backend {backend!r} requires jax "
+            f"(import failed: {e}); use backend='numpy' or unset "
+            f"${BACKEND_ENV}") from e
+    return gridax
+
 
 # ---------------------------------------------------------------------------
 # Vectorized per-size-triple cost tables
@@ -875,6 +920,8 @@ class DSEResult:
         default=None, repr=False, compare=False)
     _energy_grids: Optional[Dict[str, np.ndarray]] = field(
         default=None, repr=False, compare=False)
+    _pareto_mask_fn: Optional[object] = field(  # Callable[(cyc, e), mask]
+        default=None, repr=False, compare=False)
 
     @property
     def improvement(self) -> float:
@@ -964,10 +1011,14 @@ class DSEResult:
         the minimum cycles and the minimum energy are always represented
         (on an exact tie in one metric, the representative is the tied
         point with the better other metric)."""
+        # engines may install a bit-identical accelerated mask (the jax
+        # backend's vectorized lexsort+prefix-min vs the host walk)
+        mask_fn = self._pareto_mask_fn if self._pareto_mask_fn is not None \
+            else _pareto_mask
         if self.grid is not None:
             cycles = self.grid.costs.ravel()
             energy = self._grid_energy()["E_total"].ravel()
-            idx = np.nonzero(_pareto_mask(cycles, energy))[0]
+            idx = np.nonzero(mask_fn(cycles, energy))[0]
             return [self.grid.point(int(i)) for i in idx]
         if self.archive is not None:
             cycles = np.array([p.cycles for p in self.archive], dtype=float)
@@ -975,7 +1026,7 @@ class DSEResult:
                 energy = np.asarray(self._energy_many(self.archive))
             else:
                 energy = np.array([self.energy_of(p) for p in self.archive])
-            mask = _pareto_mask(cycles, energy)
+            mask = mask_fn(cycles, energy)
             return [p for p, k in zip(self.archive, mask) if k]
         raise ValueError("result has no retained grid or archive")
 
@@ -1243,7 +1294,11 @@ def register_search_method(name: str, fn) -> None:
     called as ``fn(hw_base, nets, size_budget_kb, bw_budget, sizes=...,
     bws=..., tol=..., lower_bound=..., refine=..., objective=...,
     em=..., workers=...)`` and must return a ``{name: DSEResult}``
-    mapping whose results are scored in the given ``Objective``."""
+    mapping whose results are scored in the given ``Objective``.  If
+    ``fn`` additionally accepts a ``backend=...`` keyword (or
+    ``**kwargs``), a ``Study`` forwards its grid-evaluation backend
+    (``DSE_BACKENDS``); front-ends without the parameter are called
+    without it."""
     SEARCH_METHODS[name] = fn
 
 
@@ -1254,11 +1309,22 @@ def _grid_search_many(hw_base: HardwareSpec,
                       tol: float, lower_bound: bool,
                       refine=None, objective: Optional[Objective] = None,
                       em: EnergyModel = DEFAULT_ENERGY,
-                      workers: int = 0) -> Dict[str, DSEResult]:
-    """The tensorized exhaustive front-end (``method="grid"``)."""
+                      workers: int = 0,
+                      backend: Optional[str] = None) -> Dict[str, DSEResult]:
+    """The tensorized exhaustive front-end (``method="grid"``).
+
+    ``backend`` picks where the grid *reductions* run (``DSE_BACKENDS``:
+    ``"numpy"`` host default, ``"jax"`` on-device jit/vmap,
+    ``"jax-fused"`` with best/worst through the fused Pallas kernel;
+    ``None`` follows ``$REPRO_DSE_BACKEND``).  Table construction, the
+    retained grids, and every ``DSEResult`` accessor are shared, and the
+    backends are pinned bit-identical — same best/worst/frontier/Pareto,
+    int64-exact cycles (the jax path runs under x64)."""
     if refine is not None:
         raise ValueError("refine config only applies to method='refine'")
     obj = resolve_objective(objective)
+    backend = resolve_backend(backend)
+    gridax = _load_gridax(backend) if backend != "numpy" else None
     lo_s = size_budget_kb * (1 - tol) if lower_bound else 0
     lo_b = bw_budget * (1 - tol) if lower_bound else 0
     size_tuples = _tuples(sizes, 4, lo_s, size_budget_kb * (1 + tol))
@@ -1276,27 +1342,64 @@ def _grid_search_many(hw_base: HardwareSpec,
                                                       workers=workers)
     simd_mats, simd_pmats, simd_e = eng.simd_matrices(vs, ws)
     sizes_arr = np.array(size_tuples, dtype=np.int64)
+    frontier_mult = 1.0 + FRONTIER_FRAC
+
+    # On-device cycles sweeps reduce all networks in one vmapped dispatch
+    # (the candidate-space projections are shared); general objectives
+    # reduce per network inside the loop.
+    jax_cycles = None
+    if gridax is not None and type(obj) is Cycles:
+        names = list(nets)
+        jax_cycles = dict(zip(names, gridax.reduce_cycles_many(
+            [conv_mats[n] for n in names], [simd_mats[n] for n in names],
+            s3_of, b3_of, v_of, w_of, frontier_mult=frontier_mult,
+            fused=(backend == "jax-fused"))))
 
     out: Dict[str, DSEResult] = {}
     for name in nets:
-        costs = (conv_mats[name][np.ix_(s3_of, b3_of)]
-                 + simd_mats[name][np.ix_(v_of, w_of)])
-        grid = DSEGrid(costs, size_tuples, bw_tuples)
         energy = _EnergyFields(hw=hw_base, em=em, conv=conv_e[name],
                                simd=simd_e[name], s3_of=s3_of, v_of=v_of,
                                sizes_kb=sizes_arr)
+        fmask = None             # flat within-FRONTIER_FRAC mask (device)
+        report = None            # energy report grids, if already scored
         if type(obj) is Cycles:
             # Legacy fast path: the score IS the int64 cycle count.
             # (Exact-type check: a custom objective registered under the
             # "cycles" name still gets its score() called below.)
-            flat = costs.ravel()
             scores = None
-            # argmin/argmax return the first occurrence, matching the
-            # legacy strict-inequality update order (size-outer,
-            # bandwidth-inner).
-            best = grid.point(int(flat.argmin()))
-            worst = grid.point(int(flat.argmax()))
+            if jax_cycles is not None:
+                costs, bi, wi, fmask = jax_cycles[name]
+                grid = DSEGrid(costs, size_tuples, bw_tuples)
+                best = grid.point(bi)
+                worst = grid.point(wi)
+            else:
+                costs = (conv_mats[name][np.ix_(s3_of, b3_of)]
+                         + simd_mats[name][np.ix_(v_of, w_of)])
+                grid = DSEGrid(costs, size_tuples, bw_tuples)
+                flat = costs.ravel()
+                # argmin/argmax return the first occurrence, matching the
+                # legacy strict-inequality update order (size-outer,
+                # bandwidth-inner).
+                best = grid.point(int(flat.argmin()))
+                worst = grid.point(int(flat.argmax()))
+        elif gridax is not None:
+            costs, scores, report, bi, wi, feasible, fmask = \
+                gridax.reduce_scored(
+                    conv_mats[name], simd_mats[name], s3_of, b3_of,
+                    v_of, w_of, objective=obj,
+                    energy_grids_fn=energy.grids,
+                    frontier_mult=frontier_mult)
+            if not feasible:
+                raise ValueError(
+                    f"objective {obj.name!r} marks every candidate "
+                    f"infeasible for network {name!r}")
+            grid = DSEGrid(costs, size_tuples, bw_tuples)
+            best = grid.point(bi)
+            worst = grid.point(wi)
         else:
+            costs = (conv_mats[name][np.ix_(s3_of, b3_of)]
+                     + simd_mats[name][np.ix_(v_of, w_of)])
+            grid = DSEGrid(costs, size_tuples, bw_tuples)
             mb = MetricBatch(costs, lambda e=energy, c=costs: e.grids(c))
             scores = np.asarray(obj.score(mb), dtype=float)
             flat = scores.ravel()
@@ -1305,18 +1408,31 @@ def _grid_search_many(hw_base: HardwareSpec,
                 raise ValueError(
                     f"objective {obj.name!r} marks every candidate "
                     f"infeasible for network {name!r}")
-            best = grid.point(int(flat.argmin()))
+            # mask BOTH extremes: a NaN score would otherwise poison
+            # argmin (the worst side always masked; the best side is the
+            # bugfix regression-tested in test_gridax.py)
+            best = grid.point(int(np.where(feasible, flat, np.inf)
+                                  .argmin()))
             worst = grid.point(int(np.where(feasible, flat, -np.inf)
                                    .argmax()))
+            # reuse the report the scoring pass already computed (None
+            # if the objective never pulled energy)
+            report = mb._report
         phases = _PhaseGrids(conv=conv_pmats[name], simd=simd_pmats[name],
                              s3_of=s3_of, b3_of=b3_of, v_of=v_of, w_of=w_of)
+        # The device backends computed the FRONTIER_FRAC mask in the same
+        # dispatch as best/worst — materialize it eagerly (identical to
+        # the lazy host path: same promoted comparison, same grid order);
+        # they also install the vectorized Pareto mask.
+        frontier = None if fmask is None else \
+            [grid.point(int(i)) for i in np.nonzero(fmask)[0]]
         out[name] = DSEResult(best=best, worst=worst, grid=grid,
                               phase_grids=phases, objective=obj.name,
                               grid_scores=scores, _energy=energy,
-                              # reuse the report the scoring pass already
-                              # computed (None for pure-cycles scores)
-                              _energy_grids=None if scores is None
-                              else mb._report)
+                              _frontier=frontier,
+                              _energy_grids=report,
+                              _pareto_mask_fn=None if gridax is None
+                              else gridax.pareto_mask)
     return out
 
 

@@ -21,12 +21,26 @@ which are insensitive to uniform constant scaling.
 """
 from __future__ import annotations
 
+import sys
 from dataclasses import dataclass
 from typing import Dict, Mapping, Union
 
 import numpy as np
 
 from .hardware import HardwareSpec
+
+
+def array_namespace(x) -> object:
+    """``jax.numpy`` if ``x`` is a jax array, else ``numpy``.  Keeps the
+    batched energy/objective math on whichever backend produced the
+    cycles grid (the device DSE backend feeds jnp grids) without
+    importing jax on the numpy path — if ``x`` is a jax array, jax is
+    necessarily already in ``sys.modules``."""
+    jax = sys.modules.get("jax")
+    if jax is not None and isinstance(x, jax.Array):
+        import jax.numpy as jnp
+        return jnp
+    return np
 
 PJ = 1e-12
 
@@ -114,7 +128,12 @@ def compute_energy_batch(hw: HardwareSpec, *,
     scalar path, where one ``hw`` fixes every buffer size — ``sram_sizes``
     carries a per-candidate size array for each buffer, so one call prices
     an entire design-space grid.  Term structure and accumulation order
-    mirror the scalar function exactly (Eqs. 29-32)."""
+    mirror the scalar function exactly (Eqs. 29-32).
+
+    ``l_total`` may be a jax array (the device DSE backend): every term
+    is elementwise, so the report stays on device with the same IEEE
+    operations — bit-identical to the numpy path."""
+    xp = array_namespace(l_total)
     e_sa = (c_sa * em.p_sa_dyn(hw) + l_total * em.p_sa_leak(hw)) * em.t_clk_s
     e_simd = (c_simd * em.p_simd_dyn(hw)
               + l_total * em.p_simd_leak(hw)) * em.t_clk_s
@@ -131,15 +150,15 @@ def compute_energy_batch(hw: HardwareSpec, *,
     e_d = dram_bits * em.e_dram_pj_per_bit * PJ
 
     e_total = e_sa + e_simd + e_s + e_d
-    runtime_s = np.asarray(l_total, dtype=float) * em.t_clk_s
+    runtime_s = xp.asarray(l_total, dtype=float) * em.t_clk_s
     with np.errstate(divide="ignore", invalid="ignore"):
-        p_avg = np.where(runtime_s > 0, e_total / runtime_s, 0.0)
+        p_avg = xp.where(runtime_s > 0, e_total / runtime_s, 0.0)
     return {
-        "E_SA": np.asarray(e_sa, dtype=float),
-        "E_SIMD": np.asarray(e_simd, dtype=float),
-        "E_S": np.asarray(e_s + np.zeros_like(runtime_s), dtype=float),
-        "E_D": np.asarray(e_d + np.zeros_like(runtime_s), dtype=float),
-        "E_total": np.asarray(e_total, dtype=float),
+        "E_SA": xp.asarray(e_sa, dtype=float),
+        "E_SIMD": xp.asarray(e_simd, dtype=float),
+        "E_S": xp.asarray(e_s + xp.zeros_like(runtime_s), dtype=float),
+        "E_D": xp.asarray(e_d + xp.zeros_like(runtime_s), dtype=float),
+        "E_total": xp.asarray(e_total, dtype=float),
         "runtime_s": runtime_s,
         "P_avg": p_avg,
     }

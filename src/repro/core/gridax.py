@@ -1,0 +1,248 @@
+"""On-device DSE grid evaluation — the JAX backend of the grid front-end.
+
+The exhaustive search is two separable cost matrices plus a handful of
+reductions: an outer add routed through the ``s3_of``/``b3_of``/``v_of``/
+``w_of`` projections, argmin/argmax for best/worst, the within-frac
+frontier mask, objective scoring over the grid, and the 2-D Pareto mask.
+This module runs all of them on the default JAX device —
+``jax.jit``/``jax.vmap`` for the general path, and a fused Pallas
+outer-add+argmin/argmax kernel (``repro.kernels.reduce``) for the hot
+cycles-only reduction — selected per search via ``Study(backend="jax")``
+/ ``Study(backend="jax-fused")`` or ``$REPRO_DSE_BACKEND``.
+
+Bit-identity contract (pinned by ``tests/test_gridax*.py`` against the
+numpy engine and the scalar ``search_reference``):
+
+  * **int64 cycles.**  Every entry point runs under
+    ``jax.experimental.enable_x64()``: outside it jnp silently defaults
+    to int32 and large cycle grids (anything past 2**31) would truncate.
+    x64 participates in the jit cache key, so these jits never collide
+    with the repo's f32 kernel wrappers.
+  * **First-occurrence ties.**  ``jnp.argmin``/``argmax`` return the
+    first occurrence, matching the legacy strict-inequality
+    (size-outer, bandwidth-inner) walk; the fused Pallas kernel
+    preserves the same contract via its sequential strict-update
+    running reduction.
+  * **Float scoring.**  Energy/EDP/power grids are elementwise
+    float64 broadcasts of host-presummed per-axis vectors (see
+    ``_EnergyFields``), so XLA performs the same IEEE operations in the
+    same order as numpy — equality is exact, not approximate.  Custom
+    objectives that compute in numpy still work: jax arrays coerce via
+    ``__array__`` and the scores round-trip losslessly.
+
+Results return as numpy arrays: the retained ``DSEGrid``/``DSEResult``
+machinery downstream is shared with the numpy backend, which is what
+keeps every accessor (``points``, ``economic_min_*``, ``pareto`` …)
+identical by construction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from ..kernels.reduce import grid_minmax_pallas
+
+
+def _x64(fn):
+    """Run ``fn`` (tracing and execution) under the x64 context so int64
+    grids stay int64 — the context is thread-local and part of the jit
+    cache key."""
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        with enable_x64():
+            return fn(*args, **kwargs)
+    return wrapper
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# jit'd reductions
+# ---------------------------------------------------------------------------
+
+def _outer_add_impl(conv, simd, s3_of, b3_of, v_of, w_of):
+    return conv[s3_of][:, b3_of] + simd[v_of][:, w_of]
+
+
+def _reduce_cycles_impl(conv, simd, s3_of, b3_of, v_of, w_of, mult):
+    costs = _outer_add_impl(conv, simd, s3_of, b3_of, v_of, w_of)
+    flat = costs.ravel()
+    bi = jnp.argmin(flat)
+    wi = jnp.argmax(flat)
+    frontier = flat <= flat[bi] * mult
+    return costs, bi, wi, frontier
+
+
+def _frontier_impl(conv, simd, s3_of, b3_of, v_of, w_of, bi, mult):
+    costs = _outer_add_impl(conv, simd, s3_of, b3_of, v_of, w_of)
+    flat = costs.ravel()
+    return costs, flat <= flat[bi] * mult
+
+
+def _score_reduce_impl(scores, mult):
+    flat = scores.ravel()
+    finite = jnp.isfinite(flat)
+    # mask both sides: a NaN (or +-inf) score marks an infeasible
+    # candidate and must poison neither argmin nor argmax
+    bi = jnp.where(finite, flat, jnp.inf).argmin()
+    wi = jnp.where(finite, flat, -jnp.inf).argmax()
+    frontier = flat <= flat[bi] * mult
+    return bi, wi, finite.any(), frontier
+
+
+def _within_impl(values, limit):
+    return values.ravel() <= limit
+
+
+def _pareto_impl(cycles, energy):
+    n = cycles.shape[0]
+    order = jnp.lexsort((jnp.arange(n), energy, cycles))
+    e_sorted = energy[order]
+    run_min = jax.lax.cummin(e_sorted)
+    prev_min = jnp.concatenate(
+        [jnp.full((1,), jnp.inf, e_sorted.dtype), run_min[:-1]])
+    keep_sorted = e_sorted < prev_min
+    return jnp.zeros(n, dtype=bool).at[order].set(keep_sorted)
+
+
+def _gather_panels_impl(conv, simd, b3_of, w_of):
+    return conv[:, b3_of], simd[:, w_of]
+
+
+_outer_add_jit = _x64(jax.jit(_outer_add_impl))
+_reduce_cycles_one = _x64(jax.jit(_reduce_cycles_impl))
+# vmap over stacked per-network matrices: the projections are shared by
+# every network of one search, so a multi-net cycles sweep is a single
+# batched dispatch
+_reduce_cycles_vmap = _x64(jax.jit(jax.vmap(
+    _reduce_cycles_impl, in_axes=(0, 0, None, None, None, None, None))))
+_frontier_jit = _x64(jax.jit(_frontier_impl))
+_score_reduce_jit = _x64(jax.jit(_score_reduce_impl))
+_within_jit = _x64(jax.jit(_within_impl))
+_pareto_jit = _x64(jax.jit(_pareto_impl))
+_gather_panels = _x64(jax.jit(_gather_panels_impl))
+
+
+# ---------------------------------------------------------------------------
+# Public entry points (numpy in, numpy out)
+# ---------------------------------------------------------------------------
+
+@_x64
+def outer_add(conv: np.ndarray, simd: np.ndarray,
+              s3_of: np.ndarray, b3_of: np.ndarray,
+              v_of: np.ndarray, w_of: np.ndarray) -> np.ndarray:
+    """The device outer-add composition — int64-exact equivalent of
+    ``conv[np.ix_(s3_of, b3_of)] + simd[np.ix_(v_of, w_of)]``."""
+    return np.asarray(_outer_add_jit(conv, simd, s3_of, b3_of, v_of, w_of))
+
+
+@_x64
+def fused_minmax(conv: np.ndarray, simd: np.ndarray,
+                 s3_of: np.ndarray, b3_of: np.ndarray,
+                 v_of: np.ndarray, w_of: np.ndarray,
+                 interpret: Optional[bool] = None) -> Tuple[int, int]:
+    """(argmin, argmax) flat indices of the virtual cost grid via the
+    fused Pallas kernel — the grid itself is never materialized: columns
+    are pre-gathered into two small operand panels, rows are gathered
+    per grid step by scalar prefetch."""
+    if interpret is None:
+        interpret = _default_interpret()
+    cb, sb = _gather_panels(jnp.asarray(conv), jnp.asarray(simd),
+                            jnp.asarray(b3_of), jnp.asarray(w_of))
+    out = np.asarray(grid_minmax_pallas(
+        cb, sb, jnp.asarray(s3_of, dtype=jnp.int32),
+        jnp.asarray(v_of, dtype=jnp.int32), interpret=interpret))
+    return int(out[1]), int(out[3])
+
+
+@_x64
+def reduce_cycles_many(convs: Sequence[np.ndarray],
+                       simds: Sequence[np.ndarray],
+                       s3_of: np.ndarray, b3_of: np.ndarray,
+                       v_of: np.ndarray, w_of: np.ndarray, *,
+                       frontier_mult: float, fused: bool = False,
+                       interpret: Optional[bool] = None
+                       ) -> List[Tuple[np.ndarray, int, int, np.ndarray]]:
+    """The cycles-objective reduction for N networks sharing one
+    candidate space: per network ``(costs, best_idx, worst_idx,
+    frontier_mask)`` with ``frontier_mask = costs <= best*frontier_mult``
+    (flat).  Multiple networks run as one vmapped dispatch; ``fused``
+    routes best/worst through the Pallas kernel instead of XLA argmin."""
+    if fused:
+        out = []
+        for conv, simd in zip(convs, simds):
+            bi, wi = fused_minmax(conv, simd, s3_of, b3_of, v_of, w_of,
+                                  interpret=interpret)
+            costs, fm = _frontier_jit(conv, simd, s3_of, b3_of, v_of,
+                                      w_of, bi, frontier_mult)
+            out.append((np.asarray(costs), bi, wi, np.asarray(fm)))
+        return out
+    if len(convs) == 1:
+        costs, bi, wi, fm = _reduce_cycles_one(
+            convs[0], simds[0], s3_of, b3_of, v_of, w_of, frontier_mult)
+        return [(np.asarray(costs), int(bi), int(wi), np.asarray(fm))]
+    costs, bi, wi, fm = _reduce_cycles_vmap(
+        jnp.stack([jnp.asarray(c) for c in convs]),
+        jnp.stack([jnp.asarray(s) for s in simds]),
+        s3_of, b3_of, v_of, w_of, frontier_mult)
+    costs, bi, wi, fm = (np.asarray(costs), np.asarray(bi),
+                         np.asarray(wi), np.asarray(fm))
+    return [(costs[n], int(bi[n]), int(wi[n]), fm[n])
+            for n in range(len(convs))]
+
+
+@_x64
+def reduce_scored(conv: np.ndarray, simd: np.ndarray,
+                  s3_of: np.ndarray, b3_of: np.ndarray,
+                  v_of: np.ndarray, w_of: np.ndarray, *,
+                  objective, energy_grids_fn: Callable, frontier_mult: float
+                  ) -> Tuple[np.ndarray, np.ndarray,
+                             Optional[Dict[str, np.ndarray]],
+                             int, int, bool, np.ndarray]:
+    """The general-objective reduction for one network: build the device
+    cost grid, score it through ``objective`` (energy grids, if the
+    objective pulls them, come from ``energy_grids_fn(costs)`` — the
+    xp-aware ``compute_energy_batch`` keeps them on device), then the
+    non-finite-masked best/worst and the frontier mask.
+
+    Returns ``(costs, scores, energy_report_or_None, best_idx,
+    worst_idx, any_feasible, frontier_mask)`` — all numpy."""
+    from .objectives import MetricBatch
+    costs_dev = _outer_add_jit(conv, simd, s3_of, b3_of, v_of, w_of)
+    mb = MetricBatch(costs_dev, lambda c=costs_dev: energy_grids_fn(c))
+    scores_dev = jnp.asarray(objective.score(mb), dtype=float)
+    bi, wi, feasible, fm = _score_reduce_jit(scores_dev, frontier_mult)
+    report = None if mb._report is None else \
+        {k: np.asarray(v) for k, v in mb._report.items()}
+    return (np.asarray(costs_dev), np.asarray(scores_dev), report,
+            int(bi), int(wi), bool(feasible), np.asarray(fm))
+
+
+def within_mask(values: np.ndarray, limit: float) -> np.ndarray:
+    """Flat boolean mask ``values <= limit`` computed on device —
+    identical promotion semantics to the numpy comparison (int64 and the
+    float limit both promote to float64)."""
+    return np.asarray(_within_jit(np.asarray(values), float(limit)))
+
+
+def pareto_mask(cycles: np.ndarray, energy: np.ndarray) -> np.ndarray:
+    """Device analogue of ``dse._pareto_mask`` — bit-identical, but
+    vectorized (the numpy version is a sequential Python walk).
+
+    Equivalence argument: after lexsorting by (cycles, energy, index),
+    the scalar walk keeps an element iff its energy is strictly below
+    the running minimum over *kept* predecessors — which equals the
+    running minimum over all predecessors, since any element that
+    lowered the minimum was itself kept.  The exclusive prefix-min
+    therefore reproduces the sequential rule exactly, and the trailing
+    index key makes the lexsort order unique (stability-independent)."""
+    return np.asarray(_pareto_jit(np.asarray(cycles),
+                                  np.asarray(energy, dtype=float)))

@@ -37,6 +37,8 @@ from typing import Callable, Dict, Optional, Union
 
 import numpy as np
 
+from .energy import array_namespace
+
 
 class MetricBatch:
     """Per-candidate metrics for one batch (or grid) of design points.
@@ -142,8 +144,11 @@ class CyclesUnderPowerCap(Objective):
     needs_energy = True
 
     def score(self, m: MetricBatch) -> np.ndarray:
-        return np.where(np.asarray(m.power) <= self.cap_w,
-                        np.asarray(m.cycles, dtype=float), np.inf)
+        # xp dispatch keeps jnp metric batches (the device DSE backend)
+        # on device; the numpy path is byte-for-byte the legacy one
+        xp = array_namespace(m.cycles)
+        return xp.where(xp.asarray(m.power) <= self.cap_w,
+                        xp.asarray(m.cycles, dtype=float), np.inf)
 
     def __repr__(self) -> str:
         return f"CyclesUnderPowerCap(cap_w={self.cap_w})"

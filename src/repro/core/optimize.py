@@ -504,8 +504,15 @@ def refine_search_many(hw_base: HardwareSpec,
                        refine: Optional[RefineConfig] = None,
                        objective: Optional[Objective] = None,
                        em: EnergyModel = DEFAULT_ENERGY,
-                       workers: int = 0) -> Dict[str, DSEResult]:
+                       workers: int = 0,
+                       backend: Optional[str] = None) -> Dict[str, DSEResult]:
     """The ``method="refine"`` front-end (see module docstring).
+
+    ``backend`` is accepted for front-end signature parity (a ``Study``
+    forwards its grid-evaluation backend to every front-end declaring
+    it) and ignored: the local search prices small scalar neighborhoods
+    where host numpy is already the fast path — the on-device backends
+    (``repro.core.gridax``) pay off on whole-lattice reductions.
 
     Networks are optimized independently but share the union cost tables
     and the process-lifetime table cache, exactly like the grid engine —

@@ -34,6 +34,7 @@ default cycles objective.
 from __future__ import annotations
 
 import contextlib
+import inspect
 import random
 import zlib
 from dataclasses import dataclass
@@ -42,7 +43,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from .backward import expand_training_graph
 from .dse import (BWS, SEARCH_METHODS, SIZES_KB, DSEPoint, DSEResult, Layer,
-                  clear_table_caches, table_cache_stats)
+                  clear_table_caches, resolve_backend, table_cache_stats)
 from .energy import DEFAULT_ENERGY, EnergyModel
 from .hardware import KB, HardwareSpec
 from .layers import ConvLayer, SimdLayer
@@ -201,6 +202,14 @@ class Study:
     ``selfcheck=n`` (default ``$REPRO_DSE_SELFCHECK``, else off)
     cross-validates n sampled candidates of every search against the
     scalar reference walk and raises ``IntegrityError`` on divergence.
+
+    ``backend`` picks where the exhaustive front-end's grid reductions
+    run — ``"numpy"`` (host, the default), ``"jax"`` (on-device
+    jit/vmap), or ``"jax-fused"`` (jit/vmap with the fused Pallas
+    best/worst kernel); ``None`` follows ``$REPRO_DSE_BACKEND``.  All
+    backends are pinned bit-identical (``repro.core.gridax``); front-ends
+    that don't take a ``backend`` parameter (e.g. ``"refine"``'s scalar
+    neighborhoods, or third-party registrations) are called without it.
     """
 
     _INHERIT = object()          # store default: follow env/global rules
@@ -213,7 +222,8 @@ class Study:
                  workers: Optional[int] = None,
                  store: Union[TableStore, str, Path, None] = _INHERIT,
                  selfcheck: Optional[int] = None,
-                 methods: Optional[Dict[str, object]] = None):
+                 methods: Optional[Dict[str, object]] = None,
+                 backend: Optional[str] = None):
         self.hw = hw
         self.sizes = tuple(sizes)
         self.bws = tuple(bws)
@@ -225,6 +235,7 @@ class Study:
         self.selfcheck = default_selfcheck() if selfcheck is None \
             else max(0, int(selfcheck))
         self._methods = methods
+        self.backend = resolve_backend(backend)
 
     # ---- front-end registry ----------------------------------------------
 
@@ -266,14 +277,21 @@ class Study:
         nets = {key: as_workload(w).layers()
                 for key, w in workloads.items()}
         fn = self._resolve_method(method)
+        kwargs = dict(sizes=self.sizes, bws=self.bws, tol=self.tol,
+                      lower_bound=self.lower_bound, refine=refine,
+                      objective=obj, em=self.energy_model,
+                      workers=self.workers)
+        # forward the grid-evaluation backend only to front-ends that
+        # declare it (keeps pre-existing registrations working unchanged)
+        params = inspect.signature(fn).parameters
+        if "backend" in params or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in params.values()):
+            kwargs["backend"] = self.backend
         ctx = contextlib.nullcontext() if self.store is Study._INHERIT \
             else store_context(self.store)
         with ctx:
-            out = fn(self.hw, nets, size_budget_kb, bw_budget,
-                     sizes=self.sizes, bws=self.bws, tol=self.tol,
-                     lower_bound=self.lower_bound, refine=refine,
-                     objective=obj, em=self.energy_model,
-                     workers=self.workers)
+            out = fn(self.hw, nets, size_budget_kb, bw_budget, **kwargs)
         if self.selfcheck > 0:
             for key, res in out.items():
                 self._self_check(key, nets[key], res,

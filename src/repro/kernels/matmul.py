@@ -33,6 +33,11 @@ def matmul_pallas(a: jax.Array, b: jax.Array, bm: int = 256, bn: int = 256,
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
+    if m == 0 or n == 0 or k == 0:
+        # Degenerate GEMM: clamping blocks to a zero dimension would zero
+        # the grid divisor.  An empty reduction axis (k == 0) contracts to
+        # zeros; an empty m or n yields the correctly-shaped empty matrix.
+        return jnp.zeros((m, n), a.dtype)
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
     if pm or pk:

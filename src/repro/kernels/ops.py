@@ -31,9 +31,14 @@ def matmul(a, b, bm: int = 0, bn: int = 0, bk: int = 0,
     if interpret is None:
         interpret = _default_interpret()
     if not (bm and bn and bk):
-        blk = select_matmul_block(a.shape[0], b.shape[1], a.shape[1],
-                                  bytes_in=a.dtype.itemsize)
-        bm, bn, bk = blk.bm, blk.bn, blk.bk
+        if 0 in (a.shape[0], b.shape[1], a.shape[1]):
+            # degenerate shape: the tile DSE has no valid block; any block
+            # triple works because matmul_pallas short-circuits to zeros
+            bm = bn = bk = 1
+        else:
+            blk = select_matmul_block(a.shape[0], b.shape[1], a.shape[1],
+                                      bytes_in=a.dtype.itemsize)
+            bm, bn, bk = blk.bm, blk.bn, blk.bk
     return _mm.matmul_pallas(a, b, bm, bn, bk, interpret=interpret)
 
 

@@ -1,0 +1,88 @@
+"""Fused DSE grid-reduction Pallas kernel: outer-add + argmin/argmax.
+
+The DSE cost grid is separable — ``costs[i, j] = conv[s3_of[i], j'] +
+simd[v_of[i], j']`` after the bandwidth columns have been pre-gathered —
+so the best/worst search never needs the [n_size x n_bw] grid in memory:
+each grid step streams one size-row of both operand panels through VMEM,
+adds them, reduces to the row min/max, and folds the result into a
+4-scalar running state in SMEM.  Row gathering uses scalar prefetch
+(``PrefetchScalarGridSpec``): the ``s3_of``/``v_of`` projection vectors
+are prefetched to SMEM and indexed inside the ``BlockSpec`` index maps,
+the same pattern a gather-GEMM uses for ragged operands.
+
+Tie-break contract: Pallas executes the grid sequentially in row-major
+order and the running update uses strict ``<`` / ``>``, so of several
+equal-valued candidates the lowest flat index wins — exactly the legacy
+strict-inequality (size-outer, bandwidth-inner) walk that
+``core.dse._grid_search_many`` and ``search_reference`` pin.
+
+int64 note: cycle grids are int64 (callers run under ``enable_x64`` —
+see ``core.gridax``); interpret mode executes that faithfully on CPU.
+Real TPU lowering of int64 is not supported, so on-device use means
+int32-safe grids — the callers keep this kernel on the interpret path
+off-TPU and validate it there, like every other kernel in this package.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _minmax_kernel(s3_of_ref, v_of_ref, conv_ref, simd_ref, out_ref):
+    del s3_of_ref, v_of_ref            # consumed by the BlockSpec index maps
+    i = pl.program_id(0)
+    vals = conv_ref[0, :] + simd_ref[0, :]
+    nb = vals.shape[0]
+    k = jnp.argmin(vals)               # first occurrence within the row
+    kx = jnp.argmax(vals)
+    bv, wv = vals[k], vals[kx]
+    bi, wi = i * nb + k, i * nb + kx   # flat row-major candidate indices
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0] = bv
+        out_ref[1] = bi
+        out_ref[2] = wv
+        out_ref[3] = wi
+
+    @pl.when(i > 0)
+    def _update():
+        # strict comparisons keep the earliest row on ties (first-occurrence
+        # contract); value slot is written after the index slot reads it
+        better = bv < out_ref[0]
+        out_ref[1] = jnp.where(better, bi, out_ref[1])
+        out_ref[0] = jnp.where(better, bv, out_ref[0])
+        worse = wv > out_ref[2]
+        out_ref[3] = jnp.where(worse, wi, out_ref[3])
+        out_ref[2] = jnp.where(worse, wv, out_ref[2])
+
+
+def grid_minmax_pallas(conv_rows: jax.Array, simd_rows: jax.Array,
+                       s3_of: jax.Array, v_of: jax.Array,
+                       interpret: bool = True) -> jax.Array:
+    """``[min, argmin, max, argmax]`` over the virtual grid
+    ``conv_rows[s3_of[i], :] + simd_rows[v_of[i], :]`` (flat row-major
+    indices), without materializing it.
+
+    ``conv_rows``/``simd_rows`` are the column-pre-gathered operand
+    panels ([n_size_triples x n_bw] and [n_vmem x n_bw]); ``s3_of``/
+    ``v_of`` are int32 per-size-row projections into them.
+    """
+    ns = s3_of.shape[0]
+    nb = conv_rows.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ns,),
+        in_specs=[pl.BlockSpec((1, nb), lambda i, s3, v: (s3[i], 0)),
+                  pl.BlockSpec((1, nb), lambda i, s3, v: (v[i], 0))],
+        out_specs=pl.BlockSpec((4,), lambda i, s3, v: (0,),
+                               memory_space=pltpu.SMEM),
+    )
+    return pl.pallas_call(
+        _minmax_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((4,), conv_rows.dtype),
+        interpret=interpret,
+    )(s3_of, v_of, conv_rows, simd_rows)

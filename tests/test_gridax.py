@@ -1,0 +1,286 @@
+"""Bit-identity of the on-device (jax) DSE grid backends.
+
+The ``backend="jax"`` / ``backend="jax-fused"`` engines must reproduce
+the numpy grid engine — and the scalar ``search_reference`` ground
+truth — *exactly*: same best/worst points, same within-frac frontiers
+(contents and order), same Pareto sets, bitwise-equal cost and score
+grids.  Pinned here on the paper's Table VIII setup (16x16 array,
+full size/bandwidth lattice) for ResNet-50 inference and training
+across the cycles/energy/EDP objectives, plus the regression tests for
+the two bugs this backend work surfaced: the NaN-unmasked best-side
+argmin in the scored numpy reduction, and int64 grids past 2**31
+(which an x64-less jax path would silently truncate)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import INFER_PRESETS, TRAIN_PRESETS
+from repro.core import gridax
+from repro.core.dse import (BWS, SIZES_KB, DSE_BACKENDS, _pareto_mask,
+                            resolve_backend, search_reference)
+from repro.core.layers import ConvLayer, fc, pool, relu, tensor_add
+from repro.core.objectives import Objective
+from repro.core.study import Study, Workload
+
+BUDGET_KB = 2048
+BUDGET_BW = 2048
+OBJECTIVES = ("cycles", "energy", "edp")
+PHASES = ("inference", "training")
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def tiny_net():
+    return [
+        _conv("c1"),
+        relu("r1", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32, has_bias=False),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        tensor_add("a1", 8, 8, 1, 32),
+        fc("fc", 1, 2048, 100),
+    ]
+
+
+def _phase_setup(phase):
+    if phase == "training":
+        return TRAIN_PRESETS[16], Workload("resnet50", training=True)
+    return INFER_PRESETS[16], Workload("resnet50")
+
+
+@pytest.fixture(scope="module")
+def table8():
+    """Table VIII searches on both backends, all objectives: the cost
+    tables are cached per (hw, net), so each backend's reductions are
+    the only per-call work."""
+    out = {}
+    for phase in PHASES:
+        hw, wl = _phase_setup(phase)
+        for backend in ("numpy", "jax"):
+            study = Study(hw, backend=backend)
+            for obj in OBJECTIVES:
+                out[phase, backend, obj] = study.search(
+                    wl, BUDGET_KB, BUDGET_BW, objective=obj)
+    return out
+
+
+@pytest.mark.parametrize("phase", PHASES)
+@pytest.mark.parametrize("obj", OBJECTIVES)
+def test_backend_bit_identity(table8, phase, obj):
+    a = table8[phase, "numpy", obj]
+    b = table8[phase, "jax", obj]
+    assert a.best == b.best
+    assert a.worst == b.worst
+    assert a.improvement == b.improvement
+    for frac in (0.05, 0.15, 0.5):
+        assert a.within(frac) == b.within(frac)
+    assert np.array_equal(a.grid.costs, b.grid.costs)
+    if obj == "cycles":
+        assert a.grid_scores is None and b.grid_scores is None
+    else:
+        assert np.array_equal(np.asarray(a.grid_scores, dtype=float),
+                              np.asarray(b.grid_scores, dtype=float))
+    assert a.pareto() == b.pareto()
+    assert a.economic_min_sram() == b.economic_min_sram()
+    assert a.economic_min_bw() == b.economic_min_bw()
+
+
+@pytest.mark.parametrize("phase", PHASES)
+def test_scalar_reference_ground_truth(table8, phase):
+    hw, wl = _phase_setup(phase)
+    ref = search_reference(hw, wl.layers(), BUDGET_KB, BUDGET_BW)
+    res = table8[phase, "jax", "cycles"]
+    assert res.best == ref.best
+    assert res.worst == ref.worst
+    assert res.within(0.15) == ref.within(0.15)
+
+
+def test_training_grid_exceeds_int32(table8):
+    """The training grid's cycle counts overflow int32 — the jax
+    backend's x64 handling is what keeps them exact (outside
+    ``enable_x64`` jnp would silently truncate to int32)."""
+    res = table8["training", "jax", "cycles"]
+    assert int(res.worst.cycles) > 2 ** 31
+    assert res.grid.costs.dtype == np.int64
+
+
+def test_fused_backend_matches(table8):
+    hw, wl = _phase_setup("inference")
+    rf = Study(hw, backend="jax-fused").search(wl, BUDGET_KB, BUDGET_BW)
+    rn = table8["inference", "numpy", "cycles"]
+    assert rf.best == rn.best
+    assert rf.worst == rn.worst
+    assert rf.within(0.15) == rn.within(0.15)
+    assert np.array_equal(rf.grid.costs, rn.grid.costs)
+
+
+# ---------------------------------------------------------------------------
+# gridax unit-level identities (synthetic int64 grids past 2**31)
+# ---------------------------------------------------------------------------
+
+def _synthetic(seed=7, ns=23, nb=17, s=11, b=13):
+    """Duplicate-laden int64 matrices with entries around 2**40, plus
+    projection vectors with repeated rows/columns."""
+    rng = np.random.default_rng(seed)
+    conv = rng.integers(2 ** 39, 2 ** 41, size=(s, b), dtype=np.int64)
+    simd = rng.integers(2 ** 33, 2 ** 35, size=(s, b), dtype=np.int64)
+    # quantize to force many exact ties, exercising first-occurrence
+    conv = (conv // 2 ** 37) * 2 ** 37
+    simd = (simd // 2 ** 33) * 2 ** 33
+    s3_of = rng.integers(0, s, size=ns)
+    b3_of = rng.integers(0, b, size=nb)
+    v_of = rng.integers(0, s, size=ns)
+    w_of = rng.integers(0, b, size=nb)
+    return conv, simd, s3_of, b3_of, v_of, w_of
+
+
+def _numpy_grid(conv, simd, s3_of, b3_of, v_of, w_of):
+    return conv[np.ix_(s3_of, b3_of)] + simd[np.ix_(v_of, w_of)]
+
+
+def test_outer_add_int64_exact():
+    conv, simd, *proj = _synthetic()
+    want = _numpy_grid(conv, simd, *proj)
+    got = gridax.outer_add(conv, simd, *proj)
+    assert got.dtype == np.int64
+    assert np.array_equal(got, want)
+    assert int(want.max()) > 2 ** 31          # the test would be vacuous
+
+
+def test_reduce_cycles_first_occurrence_and_frontier():
+    conv, simd, *proj = _synthetic()
+    want = _numpy_grid(conv, simd, *proj)
+    flat = want.ravel()
+    mult = 1.15
+    [(costs, bi, wi, fm)] = gridax.reduce_cycles_many(
+        [conv], [simd], *proj, frontier_mult=mult)
+    assert np.array_equal(costs, want)
+    assert bi == int(flat.argmin()) and wi == int(flat.argmax())
+    assert np.array_equal(fm, flat <= flat[flat.argmin()] * mult)
+
+
+def test_reduce_cycles_vmap_matches_per_net():
+    conv, simd, *proj = _synthetic()
+    conv2, simd2, *_ = _synthetic(seed=8)
+    many = gridax.reduce_cycles_many([conv, conv2], [simd, simd2], *proj,
+                                     frontier_mult=1.15)
+    for (c, s), (costs, bi, wi, fm) in zip([(conv, simd), (conv2, simd2)],
+                                           many):
+        flat = _numpy_grid(c, s, *proj).ravel()
+        assert bi == int(flat.argmin()) and wi == int(flat.argmax())
+        assert np.array_equal(fm, flat <= flat[flat.argmin()] * 1.15)
+
+
+def test_fused_minmax_matches_numpy():
+    conv, simd, *proj = _synthetic()
+    flat = _numpy_grid(conv, simd, *proj).ravel()
+    bi, wi = gridax.fused_minmax(conv, simd, *proj, interpret=True)
+    assert bi == int(flat.argmin())
+    assert wi == int(flat.argmax())
+
+
+def test_pareto_mask_matches_sequential():
+    rng = np.random.default_rng(3)
+    cycles = rng.integers(1, 50, size=400).astype(np.int64) * 2 ** 28
+    energy = rng.integers(1, 50, size=400).astype(float)
+    assert np.array_equal(gridax.pareto_mask(cycles, energy),
+                          _pareto_mask(cycles, energy))
+
+
+def test_within_mask_promotion():
+    vals = np.array([2 ** 40, 2 ** 40 + 1, 2 ** 40 + 2], dtype=np.int64)
+    limit = float(2 ** 40 + 1)
+    assert np.array_equal(gridax.within_mask(vals, limit),
+                          vals <= limit)
+
+
+# ---------------------------------------------------------------------------
+# NaN-masking regression (the scored-reduction bugfix)
+# ---------------------------------------------------------------------------
+
+class _NanBait(Objective):
+    """Scores cycles but poisons the true-best candidate with NaN: the
+    old numpy reduction left NaN unmasked on the best side, so argmin
+    returned the NaN position instead of the best *feasible* one."""
+
+    name = "nan_bait"
+    needs_energy = False
+
+    def score(self, m):
+        s = np.asarray(m.cycles, dtype=float).copy()
+        flat = s.ravel()
+        flat[flat.argmin()] = np.nan
+        flat[flat.argmax()] = np.nan       # nor may NaN win the worst side
+        return flat.reshape(s.shape)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_nan_scores_never_win(backend):
+    hw = INFER_PRESETS[16]
+    res = Study(hw, sizes=(32, 64, 128, 256), bws=(32, 64, 128, 256),
+                backend=backend).search(
+        Workload(tiny_net()), 256, 256, objective=_NanBait())
+    scores = np.asarray(res.grid_scores, dtype=float).ravel()
+    n_bw = len(res.grid.bw_tuples)
+
+    def flat(point):
+        r, c = res.grid.locate(point)
+        return r * n_bw + c
+
+    assert np.isnan(scores).sum() >= 1
+    assert np.isfinite(scores[flat(res.best)])
+    assert np.isfinite(scores[flat(res.worst)])
+    assert scores[flat(res.best)] == np.nanmin(scores)
+    assert scores[flat(res.worst)] == np.nanmax(scores)
+
+
+def test_nan_scores_identical_across_backends():
+    hw = INFER_PRESETS[16]
+    kw = dict(sizes=(32, 64, 128, 256), bws=(32, 64, 128, 256))
+    rn = Study(hw, backend="numpy", **kw).search(
+        Workload(tiny_net()), 256, 256, objective=_NanBait())
+    rj = Study(hw, backend="jax", **kw).search(
+        Workload(tiny_net()), 256, 256, objective=_NanBait())
+    assert rn.best == rj.best and rn.worst == rj.worst
+
+
+# ---------------------------------------------------------------------------
+# backend selection plumbing
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_explicit():
+    assert resolve_backend("numpy") == "numpy"
+    assert resolve_backend("jax") == "jax"
+    assert resolve_backend("jax-fused") == "jax-fused"
+    with pytest.raises(ValueError, match="unknown DSE backend"):
+        resolve_backend("nope")
+    assert set(DSE_BACKENDS) == {"numpy", "jax", "jax-fused"}
+
+
+def test_backend_env_var(monkeypatch):
+    monkeypatch.setenv("REPRO_DSE_BACKEND", "jax")
+    assert resolve_backend(None) == "jax"
+    assert Study(INFER_PRESETS[16]).backend == "jax"
+    # explicit argument beats the environment
+    assert Study(INFER_PRESETS[16], backend="numpy").backend == "numpy"
+
+
+def test_backend_env_var_garbage_warns(monkeypatch):
+    monkeypatch.setenv("REPRO_DSE_BACKEND", "warp-drive")
+    with pytest.warns(RuntimeWarning, match="REPRO_DSE_BACKEND"):
+        assert resolve_backend(None) == "numpy"
+
+
+def test_refine_front_end_tolerates_backend():
+    """A Study with a device backend still runs method="refine" — the
+    local search declares (and ignores) the forwarded backend."""
+    hw = INFER_PRESETS[16]
+    res = Study(hw, sizes=(32, 64, 128, 256), bws=(32, 64, 128, 256),
+                backend="jax").search(Workload(tiny_net()), 256, 256,
+                                      method="refine")
+    assert res.best.cycles > 0

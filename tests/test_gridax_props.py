@@ -1,0 +1,81 @@
+"""Property tests for the device DSE reductions (hypothesis, CI-only).
+
+Random duplicate-laden integer grids pin the parts of the bit-identity
+contract that example tests can only sample: first-occurrence tie-break
+of every argmin/argmax path (XLA, vmapped, fused Pallas), and the
+within/Pareto masks against the retained sequential numpy walks."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (installed in CI; optional locally)")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import gridax
+from repro.core.dse import _pareto_mask
+
+
+def _case(seed, ns, nb, s, b, scale_bits):
+    """Matrices quantized to few distinct values -> many exact ties."""
+    rng = np.random.default_rng(seed)
+    lo, hi = 2 ** scale_bits, 2 ** (scale_bits + 2)
+    conv = rng.integers(lo, hi, size=(s, b), dtype=np.int64)
+    simd = rng.integers(lo // 4, hi // 4, size=(s, b), dtype=np.int64)
+    q = 2 ** scale_bits
+    conv, simd = (conv // q) * q, (simd // (q // 4)) * (q // 4)
+    return (conv, simd, rng.integers(0, s, size=ns),
+            rng.integers(0, b, size=nb), rng.integers(0, s, size=ns),
+            rng.integers(0, b, size=nb))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), ns=st.integers(1, 24),
+       nb=st.integers(1, 24), s=st.integers(1, 12), b=st.integers(1, 12),
+       scale_bits=st.sampled_from([8, 31, 39]))
+def test_reduce_first_occurrence(seed, ns, nb, s, b, scale_bits):
+    conv, simd, *proj = _case(seed, ns, nb, s, b, scale_bits)
+    flat = (conv[np.ix_(proj[0], proj[1])]
+            + simd[np.ix_(proj[2], proj[3])]).ravel()
+    [(costs, bi, wi, fm)] = gridax.reduce_cycles_many(
+        [conv], [simd], *proj, frontier_mult=1.15)
+    assert np.array_equal(costs.ravel(), flat)
+    assert bi == int(flat.argmin())            # numpy argmin: first occurrence
+    assert wi == int(flat.argmax())
+    assert np.array_equal(fm, flat <= flat[flat.argmin()] * 1.15)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), ns=st.integers(1, 12),
+       nb=st.integers(1, 12), s=st.integers(1, 8), b=st.integers(1, 8),
+       scale_bits=st.sampled_from([8, 39]))
+def test_fused_first_occurrence(seed, ns, nb, s, b, scale_bits):
+    conv, simd, *proj = _case(seed, ns, nb, s, b, scale_bits)
+    flat = (conv[np.ix_(proj[0], proj[1])]
+            + simd[np.ix_(proj[2], proj[3])]).ravel()
+    bi, wi = gridax.fused_minmax(conv, simd, *proj, interpret=True)
+    assert bi == int(flat.argmin())
+    assert wi == int(flat.argmax())
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(1, 200),
+       k=st.integers(1, 8))
+def test_pareto_mask_equivalence(seed, n, k):
+    # few distinct values (k) per axis -> dense duplicate fronts
+    rng = np.random.default_rng(seed)
+    cycles = rng.integers(1, k + 1, size=n).astype(np.int64) * 2 ** 30
+    energy = rng.integers(1, k + 1, size=n).astype(float)
+    assert np.array_equal(gridax.pareto_mask(cycles, energy),
+                          _pareto_mask(cycles, energy))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(1, 100),
+       frac=st.sampled_from([0.0, 0.05, 0.15, 0.5]))
+def test_within_mask_equivalence(seed, n, frac):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(1, 5, size=n).astype(np.int64) * 2 ** 38
+    limit = float(vals.min()) * (1.0 + frac)
+    assert np.array_equal(gridax.within_mask(vals, limit), vals <= limit)

@@ -35,6 +35,31 @@ def test_matmul_sweep(m, n, k, dtype):
                                **_tol(dtype))
 
 
+@pytest.mark.parametrize("m,n,k", [(0, 8, 8), (8, 0, 8), (8, 8, 0),
+                                   (0, 0, 0), (1, 1, 0)])
+@pytest.mark.parametrize("explicit_blocks", [False, True])
+def test_matmul_zero_dim(m, n, k, explicit_blocks):
+    """Degenerate GEMMs must not divide by a zero block count (the old
+    grid computation raised ZeroDivisionError): an empty reduction axis
+    contracts to zeros, an empty m or n yields the empty matrix."""
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    blocks = dict(bm=64, bn=64, bk=64) if explicit_blocks else {}
+    out = ops.matmul(a, b, **blocks)
+    assert out.shape == (m, n)
+    assert out.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.matmul_ref(a, b)))
+
+
+def test_matmul_zero_k_contracts_to_zeros():
+    # nonzero m,n with k == 0: the contraction is an empty sum -> exact 0
+    a = jnp.zeros((5, 0), jnp.float32)
+    b = jnp.zeros((0, 7), jnp.float32)
+    out = ops.matmul(a, b)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((5, 7)))
+
+
 @settings(max_examples=15, deadline=None)
 @given(m=st.integers(1, 300), n=st.integers(1, 200), k=st.integers(1, 300),
        bm=st.sampled_from([32, 64, 128]), bk=st.sampled_from([32, 128]))
