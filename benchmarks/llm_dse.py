@@ -1,0 +1,73 @@
+"""LLM workloads through the systolic DSE engine (GEMM front-end).
+
+Transformer configs lower to (GEMM + SIMD) graphs and sweep the Table
+VIII 16x16 budget: per workload the GEMM-vs-non-GEMM cycle split at the
+optimum (the paper's conv-vs-non-conv question asked of attention/MLP
+workloads), and the buffer-allocation shift against ResNet-50 at the
+same budget — how much of the SRAM/bandwidth budget moves from the
+array-side buffers to VMem when the workload's non-GEMM fraction grows.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import INFER_PRESETS, TRAIN_PRESETS
+from repro.core.study import Study, Workload
+
+from .common import row, timed
+
+JK, BUDGET = 16, 512          # Table VIII smallest array / budget
+SEQ = 512
+
+
+def _shares(res) -> str:
+    pb = res.phase_breakdown()
+    t = pb.total
+    out = (f"improvement={res.improvement:.2f}x;"
+           f"opt_sizes={'/'.join(map(str, res.best.sizes_kb))}kB;"
+           f"opt_bw={'/'.join(map(str, res.best.bws))};"
+           f"gemm={pb.gemm_cycles / t * 100:.1f}%;"
+           f"nongemm={pb.nonconv_cycles / t * 100:.1f}%")
+    if pb.bwd_cycles:
+        out += f";bwd={pb.bwd_share * 100:.1f}%"
+    return out
+
+
+def _vmem_alloc(res) -> tuple:
+    sz, bw = res.best.sizes_kb, res.best.bws
+    return sz[3] / sum(sz), bw[3] / sum(bw)
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+
+    hw_i = INFER_PRESETS[JK]
+    study_i = Study(hw_i)
+    us, llm_i = timed(study_i.search_many,
+                      {"qwen3_0_6b": Workload("qwen3_0_6b", seq=SEQ),
+                       "gemma3_27b": Workload("gemma3_27b", seq=SEQ)},
+                      BUDGET, BUDGET)
+    for name, res in llm_i.items():
+        rows.append(row(f"llm_dse.{name}.infer.{JK}x{JK}",
+                        us / len(llm_i), _shares(res)))
+
+    hw_t = TRAIN_PRESETS[JK]
+    us_t, llm_t = timed(Study(hw_t).search,
+                        Workload("qwen3_0_6b", training=True, seq=SEQ),
+                        BUDGET, BUDGET)
+    rows.append(row(f"llm_dse.qwen3_0_6b.train.{JK}x{JK}", us_t,
+                    _shares(llm_t)))
+
+    # allocation shift vs the CNN baseline at the same budget: the LLM
+    # optimum re-weights VMem capacity/bandwidth by its non-GEMM share
+    us_r, cnn = timed(study_i.search, Workload("resnet50"), BUDGET, BUDGET)
+    cv, cb = _vmem_alloc(cnn)
+    qv, qb = _vmem_alloc(llm_i["qwen3_0_6b"])
+    tv, tb = _vmem_alloc(llm_t)
+    rows.append(row(
+        f"llm_dse.alloc_shift.{JK}x{JK}", us_r,
+        f"vmem_share=resnet50:{cv * 100:.0f}%/qwen3:{qv * 100:.0f}%/"
+        f"qwen3_train:{tv * 100:.0f}%;"
+        f"bw_v_share=resnet50:{cb * 100:.0f}%/qwen3:{qb * 100:.0f}%/"
+        f"qwen3_train:{tb * 100:.0f}%"))
+    return rows

@@ -14,12 +14,15 @@ from __future__ import annotations
 
 from typing import List, Union
 
+from dataclasses import replace
+
 from . import layers as L
-from .layers import ConvLayer, SimdLayer
+from .layers import ConvLayer, GemmLayer, SimdLayer
 
-Layer = Union[ConvLayer, SimdLayer]
+Layer = Union[ConvLayer, GemmLayer, SimdLayer]
 
-__all__ = ["dx_conv", "dw_conv", "expand_training_graph"]
+__all__ = ["dx_conv", "dw_conv", "dx_gemm", "dw_gemm",
+           "expand_training_graph"]
 
 
 def dx_conv(f: ConvLayer) -> ConvLayer:
@@ -56,12 +59,40 @@ def dw_conv(f: ConvLayer) -> ConvLayer:
         phase="bwd_dw", kind=f.kind)
 
 
+def dx_gemm(f: GemmLayer) -> GemmLayer:
+    """GEMM computing dL/dX = dY . W^T: an [m x k] output reducing over
+    n — the same M/N/K model with n and k swapped, so a dX GEMM whose
+    swapped shape matches some forward GEMM shares its table column."""
+    return replace(f, name=f"{f.name}.dX", n=f.k, k=f.n,
+                   has_bias=False, phase="bwd_dx")
+
+
+def dw_gemm(f: GemmLayer) -> GemmLayer:
+    """GEMM computing dL/dW = X^T . dY: a [k x n] output reducing over
+    the streamed dim m."""
+    return replace(f, name=f"{f.name}.dW", m=f.k, k=f.m,
+                   has_bias=False, phase="bwd_dw")
+
+
+# Non-conv forward ops whose backward is modeled as a mirror-cost SIMD op
+# (same iteration space and tensor traffic as the forward — first-order
+# exact for elementwise/rotary ops and the standard softmax/norm backward
+# recomputation schedules).  Parameterized norms additionally update
+# their 1-D scale (and shift) vectors.
+_MIRROR_OPS = ("softmax", "rotary", "rmsnorm", "layernorm", "conv1d")
+_MIRROR_PREFIXES = ("act_", "gate_", "scan_")
+
+
 def expand_training_graph(net: List[Layer]) -> List[Layer]:
     """Forward pass + backward pass + parameter updates (Table I).
 
     The backward pass walks the network in reverse.  Per layer:
       Conv/FC : dX conv (skipped for the input layer), dW conv, bias grad
                 reduction (if biased), 4D weight update, 1D bias update.
+      GEMM    : dX GEMM (dY.W^T) + dW GEMM (X^T.dY); weight/bias updates
+                only for parameter GEMMs (``param=True``).
+      Norms   : mirror-cost backward + 1D scale/shift updates; softmax/
+                rotary/activations mirror without parameters.
       BN      : BN_back (Algorithm 1) + 1D scale/shift updates.
       ReLU    : relu_back.
       Pool    : pool_back (max routes through saved argmax; avg broadcasts).
@@ -86,6 +117,22 @@ def expand_training_graph(net: List[Layer]) -> List[Layer]:
                 out.append(L.param_update(f"{layer.name}.upd_b", layer.oc, 1))
             out.append(L.param_update(f"{layer.name}.upd_w",
                                       layer.weight_elems, 4))
+        elif isinstance(layer, GemmLayer):
+            # Both operand gradients are themselves GEMMs (dX = dY.W^T,
+            # dW = X^T.dY); for activation-activation GEMMs (attention
+            # scores, A.V — param=False) "dW" is just the other operand's
+            # gradient and there is no parameter to update.
+            out.append(dx_gemm(layer))
+            out.append(dw_gemm(layer))
+            if layer.param:
+                if layer.has_bias:
+                    out.append(L.bias_grad(f"{layer.name}.db", 1, 1,
+                                           layer.m * layer.count, layer.n))
+                    out.append(L.param_update(f"{layer.name}.upd_b",
+                                              layer.n * layer.count, 1))
+                out.append(L.param_update(
+                    f"{layer.name}.upd_w",
+                    layer.weight_elems * layer.count, 2))
         elif isinstance(layer, SimdLayer):
             if layer.op == "bn":
                 out.append(L.bn_back(f"{layer.name}.back", layer.h, layer.w,
@@ -106,4 +153,16 @@ def expand_training_graph(net: List[Layer]) -> List[Layer]:
             elif layer.op == "tensor_add":
                 out.append(L.tensor_add(f"{layer.name}.back", layer.h, layer.w,
                                         layer.n, layer.c, phase="bwd"))
+            elif (layer.op in _MIRROR_OPS
+                  or layer.op.startswith(_MIRROR_PREFIXES)):
+                out.append(replace(layer, name=f"{layer.name}.back",
+                                   phase="bwd"))
+                if layer.op == "rmsnorm":
+                    out.append(L.param_update(f"{layer.name}.upd_g",
+                                              layer.c, 1))
+                elif layer.op == "layernorm":
+                    out.append(L.param_update(f"{layer.name}.upd_g",
+                                              layer.c, 1))
+                    out.append(L.param_update(f"{layer.name}.upd_b",
+                                              layer.c, 1))
     return out

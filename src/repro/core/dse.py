@@ -93,17 +93,22 @@ from .conv_model import (conv_dram_bits, conv_multipliers,
                          conv_quantities_batch, conv_segment_quantities,
                          conv_sram_bits)
 from .energy import DEFAULT_ENERGY, EnergyModel, compute_energy_batch
+from .gemm_model import (gemm_dram_bits, gemm_multipliers,
+                         gemm_quantities_batch, gemm_segment_quantities,
+                         gemm_sram_bits)
 from .hardware import KB, HardwareSpec
 from .store import active_store, env_float, reset_store_stats, store_stats
 from .objectives import Cycles, MetricBatch, Objective, resolve_objective
-from .layers import ConvLayer, SimdLayer
+from .layers import ConvLayer, GemmLayer, SimdLayer
 from .simd_model import simd_part_tile_bits, simulate_simd
 from .tiling import (_conv_hw_key, _conv_layer_key,
-                     _derive_conv_tiling_arrays, _simd_hw_key,
-                     _simd_layer_key, ceil_div, make_conv_tiling,
+                     _derive_conv_tiling_arrays,
+                     _derive_gemm_tiling_arrays, _gemm_layer_key,
+                     _simd_hw_key, _simd_layer_key, ceil_div,
+                     make_conv_tiling, make_gemm_tiling,
                      make_simd_tiling, prefill_simd_tilings)
 
-Layer = Union[ConvLayer, SimdLayer]
+Layer = Union[ConvLayer, GemmLayer, SimdLayer]
 
 SIZES_KB = (32, 64, 128, 256, 512, 1024, 2048)
 BWS = (32, 64, 128, 256, 512, 1024, 2048)
@@ -327,6 +332,47 @@ class SimdTable:
         return int(self.cycles_batch([bw_v])[0])
 
 
+class GemmTable(ConvTable):
+    """Bandwidth-independent per-layer GEMM quantities for fixed buffer
+    sizes.  The stall-segment reduction and the energy tensor layout are
+    the systolic-array ones ``ConvTable`` already implements (a GEMM is
+    the conv model's unit-kernel specialization), so every batch accessor
+    — ``layer_cycles_batch``/``cycles_batch``/``phase_cycles_batch`` and
+    the ``_from_columns`` assembly path — is inherited unchanged; only
+    the per-layer quantity derivation differs.  ``layer.count`` is folded
+    into the occurrence counts and energy tensors (all linear), never the
+    per-block volumes the segment maxima read."""
+
+    def __init__(self, hw: HardwareSpec, layers: Sequence[GemmLayer]):
+        n = len(layers)
+        self.phases: Tuple[str, ...] = tuple(l.phase for l in layers)
+        self.c_tile = np.zeros(n)
+        self.o1 = np.zeros(n); self.o2 = np.zeros(n)
+        self.o4 = np.zeros(n); self.o5 = np.zeros(n)
+        self.w_bits = np.zeros(n); self.wb_bits = np.zeros(n)
+        self.i_bits = np.zeros(n)
+        self.ps_bits = np.zeros(n); self.pls_bits = np.zeros(n)
+        self.busy = np.zeros(n, dtype=np.int64)
+        self.dram = np.zeros(n, dtype=np.int64)
+        self.sram = {buf: np.zeros(n, dtype=np.int64)
+                     for buf in ("wbuf", "ibuf", "obuf", "bbuf")}
+        for x, layer in enumerate(layers):
+            t = make_gemm_tiling(hw, layer)
+            m = gemm_multipliers(layer, t)
+            q = gemm_segment_quantities(hw, layer, t, m)
+            cnt = layer.count
+            self.c_tile[x] = q.c_tile
+            self.o1[x], self.o2[x] = q.o1 * cnt, q.o2 * cnt
+            self.o4[x], self.o5[x] = q.o4 * cnt, q.o5 * cnt
+            self.w_bits[x], self.wb_bits[x] = q.w_bits, q.wb_bits
+            self.i_bits[x] = q.i_bits
+            self.ps_bits[x], self.pls_bits[x] = q.ps_bits, q.pls_bits
+            self.busy[x] = q.c_tile * (q.o1 + q.o2 + q.o4 + q.o5) * cnt
+            self.dram[x] = sum(gemm_dram_bits(hw, layer, t, m).values()) * cnt
+            for buf, bits in gemm_sram_bits(hw, layer, t, m).items():
+                self.sram[buf][x] = bits * cnt
+
+
 # ---------------------------------------------------------------------------
 # Process-lifetime table cache
 #
@@ -343,17 +389,28 @@ class SimdTable:
 
 _CONV_TABLE_CACHE: Dict[tuple, ConvTable] = {}
 _SIMD_TABLE_CACHE: Dict[tuple, SimdTable] = {}
+_GEMM_TABLE_CACHE: Dict[tuple, GemmTable] = {}
 _PREFETCHED_UNTOUCHED: set = set()      # parallel/store loads not yet fetched
 _TABLE_CACHE_STATS = {"conv_hits": 0, "conv_misses": 0,
                       "simd_hits": 0, "simd_misses": 0,
+                      "gemm_hits": 0, "gemm_misses": 0,
                       "conv_parallel_builds": 0,
                       "conv_batch_builds": 0,
-                      "conv_builds": 0, "simd_builds": 0}
+                      "gemm_batch_builds": 0,
+                      "conv_builds": 0, "simd_builds": 0, "gemm_builds": 0}
 
 
 def _conv_table_key(hw: HardwareSpec, layers: Sequence[ConvLayer]) -> tuple:
     return (_conv_hw_key(hw),
             tuple((_conv_layer_key(l), l.phase) for l in layers))
+
+
+def _gemm_table_key(hw: HardwareSpec, layers: Sequence[GemmLayer]) -> tuple:
+    # the conv hw invariants are exactly the GEMM-relevant ones (buffer
+    # sizes, bit widths, array dims); count scales the table linearly so
+    # it must key alongside the shape
+    return (_conv_hw_key(hw),
+            tuple((_gemm_layer_key(l), l.count, l.phase) for l in layers))
 
 
 def _simd_table_key(hw: HardwareSpec, layers: Sequence[SimdLayer]) -> tuple:
@@ -415,6 +472,34 @@ def get_simd_table(hw: HardwareSpec, layers: Sequence[SimdLayer]) -> SimdTable:
     return t
 
 
+def get_gemm_table(hw: HardwareSpec, layers: Sequence[GemmLayer]) -> GemmTable:
+    """Shared, process-lifetime GemmTable constructor (L1 over the
+    optional persistent store, like ``get_conv_table`` — store kind
+    ``"gemm"``).  Seeded entries from ``batch_build_gemm_tables`` count a
+    miss on first retrieval, keeping statistics path-independent."""
+    key = _gemm_table_key(hw, layers)
+    t = _GEMM_TABLE_CACHE.get(key)
+    if t is not None:
+        if key in _PREFETCHED_UNTOUCHED:
+            _PREFETCHED_UNTOUCHED.discard(key)
+            _TABLE_CACHE_STATS["gemm_misses"] += 1
+        else:
+            _TABLE_CACHE_STATS["gemm_hits"] += 1
+        return t
+    _TABLE_CACHE_STATS["gemm_misses"] += 1
+    store = active_store()
+    if store is not None:
+        t = store.load("gemm", key, GemmTable)
+        if t is not None:
+            _GEMM_TABLE_CACHE[key] = t
+            return t
+    _TABLE_CACHE_STATS["gemm_builds"] += 1
+    t = _GEMM_TABLE_CACHE[key] = GemmTable(hw, layers)
+    if store is not None:
+        store.save("gemm", key, t)
+    return t
+
+
 def _build_conv_table(args) -> ConvTable:
     """Worker-process entry point for the parallel table prefetch.  The
     optional third element is a fault directive injected (and consumed)
@@ -449,6 +534,10 @@ def batch_build_conv_tables(hws: Sequence[HardwareSpec],
     path.  ``table_cache_stats()['conv_batch_builds']`` counts the tables
     built this way."""
     layers = list(layers)
+    if not layers:
+        # zero-conv networks (pure GEMM/SIMD transformers): nothing to
+        # derive, and an empty table would only pollute the cache
+        return
     # one layers-part tuple shared by every per-variant cache key (the
     # inner tuple of _conv_table_key, hoisted out of the hw loop)
     lpart = tuple((_conv_layer_key(l), l.phase) for l in layers)
@@ -509,6 +598,71 @@ def batch_build_conv_tables(hws: Sequence[HardwareSpec],
         _TABLE_CACHE_STATS["conv_builds"] += 1
         if store is not None:
             store.save("conv", key, t)
+
+
+def batch_build_gemm_tables(hws: Sequence[HardwareSpec],
+                            layers: Sequence[GemmLayer]) -> None:
+    """Build the GemmTables for every hardware variant not already cached
+    in ONE vectorized pass per layer (the GEMM twin of
+    ``batch_build_conv_tables``: struct-of-arrays tiling derivation +
+    ``gemm_quantities_batch``, each table a column slice), and seed the
+    shared cache.  Bit-identical to the scalar ``GemmTable`` loop; an
+    empty layer union is a clean no-op."""
+    layers = list(layers)
+    if not layers:
+        return
+    lpart = tuple((_gemm_layer_key(l), l.count, l.phase) for l in layers)
+    missing = [(key, hw) for hw in dict.fromkeys(hws)
+               if (key := (_conv_hw_key(hw), lpart))
+               not in _GEMM_TABLE_CACHE]
+    store = active_store()
+    if store is not None and missing:
+        still = []
+        for key, hw in missing:
+            t = store.load("gemm", key, GemmTable)
+            if t is None:
+                still.append((key, hw))
+            else:
+                _GEMM_TABLE_CACHE[key] = t
+                _PREFETCHED_UNTOUCHED.add(key)
+        missing = still
+    if not missing:
+        return
+    base = missing[0][1]
+    tail = _conv_hw_key(base)[3:]       # bbuf, bit widths, J, K
+    if any(key[0][3:] != tail for key, _ in missing):
+        raise ValueError("batch_build_gemm_tables requires all hardware "
+                         "variants to share every invariant except the "
+                         "wbuf/ibuf/obuf sizes")
+    triples = [(hw.wbuf, hw.ibuf, hw.obuf) for _, hw in missing]
+    n_l, n_t = len(layers), len(triples)
+    f_fields = ("c_tile", "o1", "o2", "o4", "o5", "w_bits", "wb_bits",
+                "i_bits", "ps_bits", "pls_bits")
+    mats = {f: np.zeros((n_l, n_t)) for f in f_fields}
+    busy = np.zeros((n_l, n_t), dtype=np.int64)
+    dram = np.zeros((n_l, n_t), dtype=np.int64)
+    sram = {buf: np.zeros((n_l, n_t), dtype=np.int64)
+            for buf in ("wbuf", "ibuf", "obuf", "bbuf")}
+    for x, layer in enumerate(layers):
+        q = gemm_quantities_batch(
+            base, layer, _derive_gemm_tiling_arrays(base, triples, layer))
+        for f in f_fields:
+            mats[f][x] = q[f]
+        busy[x] = q["busy"]
+        dram[x] = q["dram"]
+        for buf in sram:
+            sram[buf][x] = q["sram"][buf]
+    phases = tuple(l.phase for l in layers)
+    for i, (key, _hw) in enumerate(missing):
+        t = _GEMM_TABLE_CACHE[key] = GemmTable._from_columns(
+            phases, {f: mats[f][:, i] for f in f_fields},
+            busy[:, i], dram[:, i],
+            {buf: sram[buf][:, i] for buf in sram})
+        _PREFETCHED_UNTOUCHED.add(key)
+        _TABLE_CACHE_STATS["gemm_batch_builds"] += 1
+        _TABLE_CACHE_STATS["gemm_builds"] += 1
+        if store is not None:
+            store.save("gemm", key, t)
 
 
 PREFETCH_TIMEOUT_ENV = "REPRO_DSE_BUILD_TIMEOUT"
@@ -573,6 +727,9 @@ def prefetch_conv_tables(hws: Sequence[HardwareSpec],
     is simply left missing — the caller's ``batch_build_conv_tables``
     pass rebuilds it serially, so the only cost of any worker fault is
     wall time.  This function never raises on worker failure."""
+    if not layers:
+        # zero-conv networks: never spin up a pool for an empty union
+        return
     store = active_store()
     missing = [(key, hw) for hw in dict.fromkeys(hws)
                if (key := _conv_table_key(hw, layers))
@@ -655,7 +812,8 @@ def table_cache_stats() -> Dict[str, object]:
     sweep is assertable as "store hits only, zero builds"."""
     stats = dict(_TABLE_CACHE_STATS,
                  conv_entries=len(_CONV_TABLE_CACHE),
-                 simd_entries=len(_SIMD_TABLE_CACHE))
+                 simd_entries=len(_SIMD_TABLE_CACHE),
+                 gemm_entries=len(_GEMM_TABLE_CACHE))
     stats.update(store_stats())
     stats["by_kind"] = {
         "conv": {"hits": stats["conv_hits"], "misses": stats["conv_misses"],
@@ -667,6 +825,10 @@ def table_cache_stats() -> Dict[str, object]:
                  "entries": stats["simd_entries"],
                  "builds": stats["simd_builds"], "parallel_builds": 0,
                  "batch_builds": 0},
+        "gemm": {"hits": stats["gemm_hits"], "misses": stats["gemm_misses"],
+                 "entries": stats["gemm_entries"],
+                 "builds": stats["gemm_builds"], "parallel_builds": 0,
+                 "batch_builds": stats["gemm_batch_builds"]},
     }
     return stats
 
@@ -677,6 +839,7 @@ def clear_table_caches() -> None:
     the in-memory cache is their whole point — but its counters reset."""
     _CONV_TABLE_CACHE.clear()
     _SIMD_TABLE_CACHE.clear()
+    _GEMM_TABLE_CACHE.clear()
     _PREFETCHED_UNTOUCHED.clear()
     for k in _TABLE_CACHE_STATS:
         _TABLE_CACHE_STATS[k] = 0
@@ -707,10 +870,13 @@ class PhaseBreakdown:
     """Phase-resolved cycle attribution of one design point.
 
     ``cycles`` maps namespaced phase keys ('conv:fwd', 'conv:bwd_dx',
-    'conv:bwd_dw', 'simd:fwd', 'simd:bwd') to cycle counts; the keys
-    partition the layer set, so the values sum exactly to the point's
-    total cycles.  Derived shares give the paper's Table VI style
-    conv-vs-non-conv and fwd-vs-bwd splits for *any* grid candidate."""
+    'conv:bwd_dw', 'gemm:fwd', 'gemm:bwd_dx', 'gemm:bwd_dw', 'simd:fwd',
+    'simd:bwd') to cycle counts; the keys partition the layer set, so the
+    values sum exactly to the point's total cycles.  Derived shares give
+    the paper's Table VI style conv-vs-non-conv and fwd-vs-bwd splits for
+    *any* grid candidate; GEMM phases run on the systolic array, so they
+    count toward ``conv_cycles`` (the array side of the split) and are
+    also exposed separately as ``gemm_cycles``."""
     cycles: Tuple[Tuple[str, int], ...]
 
     @classmethod
@@ -726,7 +892,12 @@ class PhaseBreakdown:
 
     @property
     def conv_cycles(self) -> int:
-        return sum(v for k, v in self.cycles if k.startswith("conv:"))
+        return sum(v for k, v in self.cycles
+                   if k.startswith(("conv:", "gemm:")))
+
+    @property
+    def gemm_cycles(self) -> int:
+        return sum(v for k, v in self.cycles if k.startswith("gemm:"))
 
     @property
     def nonconv_cycles(self) -> int:
@@ -1116,6 +1287,13 @@ def _norm_simd(layer: SimdLayer) -> SimdLayer:
     return replace(layer, name="", phase="fwd", pool_r=0, pool_s=0)
 
 
+def _norm_gemm(layer: GemmLayer) -> GemmLayer:
+    """Strip fields the cost model never reads (``param`` only gates the
+    training expansion; ``count`` scales the cost so it stays) — a dW
+    GEMM shape-equal to some fwd GEMM shares its table column."""
+    return replace(layer, name="", phase="fwd", param=True)
+
+
 class _GridEngine:
     """Shared batched cost tables for one or more networks.
 
@@ -1130,20 +1308,26 @@ class _GridEngine:
         self.hw = hw_base
         self._conv_union: List[ConvLayer] = []
         self._simd_union: List[SimdLayer] = []
+        self._gemm_union: List[GemmLayer] = []
         conv_index: Dict[ConvLayer, int] = {}
         simd_index: Dict[SimdLayer, int] = {}
+        gemm_index: Dict[GemmLayer, int] = {}
         self.conv_cols: Dict[str, List[int]] = {}
         self.simd_ids: Dict[str, List[int]] = {}
+        self.gemm_cols: Dict[str, List[int]] = {}
         # Per-network per-phase column/id lists.  Dedup is by *shape* (phase
         # stripped), so a fwd conv and a shape-identical dX conv share one
         # table column but are attributed to their own phases here.
         self.conv_phase_cols: Dict[str, Dict[str, List[int]]] = {}
         self.simd_phase_ids: Dict[str, Dict[str, List[int]]] = {}
+        self.gemm_phase_cols: Dict[str, Dict[str, List[int]]] = {}
         for name, net in nets.items():
             ccols: List[int] = []
             sids: List[int] = []
+            gcols: List[int] = []
             pcols: Dict[str, List[int]] = {}
             pids: Dict[str, List[int]] = {}
+            gpcols: Dict[str, List[int]] = {}
             for layer in net:
                 if isinstance(layer, ConvLayer):
                     k = _norm_conv(layer)
@@ -1153,6 +1337,14 @@ class _GridEngine:
                         self._conv_union.append(k)
                     ccols.append(j)
                     pcols.setdefault(f"conv:{layer.phase}", []).append(j)
+                elif isinstance(layer, GemmLayer):
+                    k = _norm_gemm(layer)
+                    j = gemm_index.get(k)
+                    if j is None:
+                        j = gemm_index[k] = len(self._gemm_union)
+                        self._gemm_union.append(k)
+                    gcols.append(j)
+                    gpcols.setdefault(f"gemm:{layer.phase}", []).append(j)
                 else:
                     k = _norm_simd(layer)
                     j = simd_index.get(k)
@@ -1163,8 +1355,10 @@ class _GridEngine:
                     pids.setdefault(f"simd:{layer.phase}", []).append(j)
             self.conv_cols[name] = ccols
             self.simd_ids[name] = sids
+            self.gemm_cols[name] = gcols
             self.conv_phase_cols[name] = pcols
             self.simd_phase_ids[name] = pids
+            self.gemm_phase_cols[name] = gpcols
 
     def conv_matrices(self, s3s: Sequence[Tuple[int, int, int]],
                       b3s: Sequence[Tuple[int, int, int]],
@@ -1199,6 +1393,11 @@ class _GridEngine:
                           for k in ("busy", "wbuf", "ibuf", "obuf",
                                     "bbuf", "dram")}
                    for name in self.conv_cols}
+        if not self._conv_union:
+            # zero-conv networks (pure GEMM/SIMD): the zeroed matrices
+            # and empty per-phase dicts ARE the conv contribution — never
+            # build or fetch an empty-union table
+            return mats, pmats, efields
         hws = [self.hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
                for wb, ib, ob in s3s]
         if workers > 1:
@@ -1240,6 +1439,9 @@ class _GridEngine:
         efields = {name: {k: np.zeros(len(vmems), dtype=np.int64)
                           for k in ("busy", "vmem", "dram")}
                    for name in self.simd_ids}
+        if not self._simd_union:
+            # SIMD-free networks: zeroed contribution, no empty tables
+            return mats, pmats, efields
         # One vectorized derivation per layer covers every VMem candidate
         # before the per-size loop (the table builds then hit the cache).
         prefill_simd_tilings(self.hw, [vm * KB for vm in vmems],
@@ -1267,6 +1469,56 @@ class _GridEngine:
                 if len(pis) > 1:
                     for ph, pi in pis.items():
                         pmats[name][ph][vi] = net_cycles(pi)
+        return mats, pmats, efields
+
+    def gemm_matrices(self, s3s: Sequence[Tuple[int, int, int]],
+                      b3s: Sequence[Tuple[int, int, int]]
+                      ) -> Tuple[Dict[str, np.ndarray],
+                                 Dict[str, Dict[str, np.ndarray]],
+                                 Dict[str, Dict[str, np.ndarray]]]:
+        """Per-network [n_size_triples x n_bw_triples] GEMM-cost matrices
+        over the SAME separable axes as ``conv_matrices`` (GEMMs live on
+        the systolic array: WBuf/IBuf/OBuf sizes, w/i/o bandwidths), so
+        the caller outer-adds them into the conv matrices before the grid
+        composition.  Same (totals, per-phase, energy fields) contract;
+        tables are batch-built serially in one vectorized pass per layer
+        (``batch_build_gemm_tables``)."""
+        bw_w = np.array([b[0] for b in b3s], dtype=float)
+        bw_i = np.array([b[1] for b in b3s], dtype=float)
+        bw_o = np.array([b[2] for b in b3s], dtype=float)
+        mats = {name: np.zeros((len(s3s), len(b3s)), dtype=np.int64)
+                for name in self.gemm_cols}
+        # Same single-phase aliasing as conv_matrices.
+        pmats = {name: {ph: np.zeros((len(s3s), len(b3s)), dtype=np.int64)
+                        for ph in phases} if len(phases) > 1
+                 else {ph: mats[name] for ph in phases}
+                 for name, phases in self.gemm_phase_cols.items()}
+        efields = {name: {k: np.zeros(len(s3s), dtype=np.int64)
+                          for k in ("busy", "wbuf", "ibuf", "obuf",
+                                    "bbuf", "dram")}
+                   for name in self.gemm_cols}
+        if not self._gemm_union:
+            return mats, pmats, efields
+        hws = [self.hw.replace(wbuf=wb * KB, ibuf=ib * KB, obuf=ob * KB)
+               for wb, ib, ob in s3s]
+        batch_build_gemm_tables(hws, self._gemm_union)
+        for si, hw in enumerate(hws):
+            table = get_gemm_table(hw, self._gemm_union)
+            per_layer = table.layer_cycles_batch(bw_w, bw_i, bw_o)
+            for name, cols in self.gemm_cols.items():
+                if cols:
+                    mats[name][si] = per_layer[:, cols].sum(axis=1) \
+                        .astype(np.int64)
+                    e = efields[name]
+                    e["busy"][si] = table.busy[cols].sum()
+                    e["dram"][si] = table.dram[cols].sum()
+                    for buf in ("wbuf", "ibuf", "obuf", "bbuf"):
+                        e[buf][si] = table.sram[buf][cols].sum()
+                pcs = self.gemm_phase_cols[name]
+                if len(pcs) > 1:
+                    for ph, pc in pcs.items():
+                        pmats[name][ph][si] = per_layer[:, pc].sum(axis=1) \
+                            .astype(np.int64)
         return mats, pmats, efields
 
 
@@ -1341,6 +1593,20 @@ def _grid_search_many(hw_base: HardwareSpec,
     conv_mats, conv_pmats, conv_e = eng.conv_matrices(s3s, b3s,
                                                       workers=workers)
     simd_mats, simd_pmats, simd_e = eng.simd_matrices(vs, ws)
+    if eng._gemm_union:
+        # GEMMs share the conv separable axes (systolic-array buffers and
+        # bandwidths), so fold them into the conv-side structures before
+        # the grid composition — OUT-OF-PLACE: single-phase conv pmats
+        # alias their totals matrix, so the originals must not mutate.
+        # The phase dicts union disjoint "conv:*"/"gemm:*" keys and the
+        # energy fields add per key; everything downstream (gridax, the
+        # energy model, phase routing) is unchanged.
+        gemm_mats, gemm_pmats, gemm_e = eng.gemm_matrices(s3s, b3s)
+        conv_mats = {n: conv_mats[n] + gemm_mats[n] for n in conv_mats}
+        conv_pmats = {n: {**conv_pmats[n], **gemm_pmats[n]}
+                      for n in conv_pmats}
+        conv_e = {n: {k: v + gemm_e[n][k] for k, v in conv_e[n].items()}
+                  for n in conv_e}
     sizes_arr = np.array(size_tuples, dtype=np.int64)
     frontier_mult = 1.0 + FRONTIER_FRAC
 
@@ -1505,6 +1771,7 @@ def phase_profile(hw: HardwareSpec, net: Sequence[Layer],
     if training:
         net = expand_training_graph(list(net))
     convs = [l for l in net if isinstance(l, ConvLayer)]
+    gemms = [l for l in net if isinstance(l, GemmLayer)]
     simds = [l for l in net if isinstance(l, SimdLayer)]
     cycles: Dict[str, int] = {}
     if convs:
@@ -1512,6 +1779,12 @@ def phase_profile(hw: HardwareSpec, net: Sequence[Layer],
             [hw.bw_w], [hw.bw_i], [hw.bw_o])
         cycles.update({f"conv:{ph}": int(v[0])
                        for ph, v in per_phase.items()})
+    if gemms:
+        per_phase = get_gemm_table(hw, gemms).phase_cycles_batch(
+            [hw.bw_w], [hw.bw_i], [hw.bw_o])
+        for ph, v in per_phase.items():
+            key = f"gemm:{ph}"
+            cycles[key] = cycles.get(key, 0) + int(v[0])
     if simds:
         per_phase = get_simd_table(hw, simds).phase_cycles_batch([hw.bw_v])
         cycles.update({f"simd:{ph}": int(v[0])
@@ -1574,6 +1847,7 @@ class _Engine:
     def __init__(self, hw_base: HardwareSpec, net: Sequence[Layer]):
         self.hw = hw_base
         self.conv_layers = tuple(l for l in net if isinstance(l, ConvLayer))
+        self.gemm_layers = tuple(l for l in net if isinstance(l, GemmLayer))
         self.simd_layers = tuple(l for l in net if isinstance(l, SimdLayer))
 
     @lru_cache(maxsize=None)
@@ -1581,6 +1855,12 @@ class _Engine:
         hw = self.hw.replace(wbuf=wbuf_kb * KB, ibuf=ibuf_kb * KB,
                              obuf=obuf_kb * KB)
         return get_conv_table(hw, self.conv_layers)
+
+    @lru_cache(maxsize=None)
+    def _gemm_table(self, wbuf_kb: int, ibuf_kb: int, obuf_kb: int) -> GemmTable:
+        hw = self.hw.replace(wbuf=wbuf_kb * KB, ibuf=ibuf_kb * KB,
+                             obuf=obuf_kb * KB)
+        return get_gemm_table(hw, self.gemm_layers)
 
     @lru_cache(maxsize=None)
     def _simd_table(self, vmem_kb: int) -> SimdTable:
@@ -1593,12 +1873,23 @@ class _Engine:
         return self._conv_table(wbuf_kb, ibuf_kb, obuf_kb).cycles(bw_w, bw_i, bw_o)
 
     @lru_cache(maxsize=None)
+    def gemm_cycles(self, wbuf_kb: int, ibuf_kb: int, obuf_kb: int,
+                    bw_w: int, bw_i: int, bw_o: int) -> int:
+        return self._gemm_table(wbuf_kb, ibuf_kb, obuf_kb).cycles(bw_w, bw_i, bw_o)
+
+    @lru_cache(maxsize=None)
     def simd_cycles(self, vmem_kb: int, bw_v: int) -> int:
         return self._simd_table(vmem_kb).cycles(bw_v)
 
     def cycles(self, sz: Tuple[int, ...], bw: Tuple[int, ...]) -> int:
-        return (self.conv_cycles(sz[0], sz[1], sz[2], bw[0], bw[1], bw[2])
-                + self.simd_cycles(sz[3], bw[3]))
+        total = self.simd_cycles(sz[3], bw[3])
+        if self.conv_layers:
+            total += self.conv_cycles(sz[0], sz[1], sz[2],
+                                      bw[0], bw[1], bw[2])
+        if self.gemm_layers:
+            total += self.gemm_cycles(sz[0], sz[1], sz[2],
+                                      bw[0], bw[1], bw[2])
+        return total
 
 
 def search_reference(hw_base: HardwareSpec, net: Sequence[Layer],
@@ -1653,10 +1944,17 @@ def sensitivity(hw_opt: HardwareSpec, net: Sequence[Layer],
     report cycles normalized to the optimal.  (Tilings are memoized keyed
     on sizes only, so the bandwidth sweeps re-derive nothing.)"""
     from .conv_model import simulate_conv
+    from .gemm_model import simulate_gemm
+
+    def sim(hw: HardwareSpec, l: Layer):
+        if isinstance(l, ConvLayer):
+            return simulate_conv(hw, l)
+        if isinstance(l, GemmLayer):
+            return simulate_gemm(hw, l)
+        return simulate_simd(hw, l)
 
     def cost(hw: HardwareSpec) -> int:
-        return sum((simulate_conv(hw, l) if isinstance(l, ConvLayer)
-                    else simulate_simd(hw, l)).total_cycles for l in net)
+        return sum(sim(hw, l).total_cycles for l in net)
 
     base = cost(hw_opt)
     out: Dict[str, Dict[int, float]] = {}

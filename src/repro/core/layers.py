@@ -20,6 +20,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 # ---------------------------------------------------------------------------
 
 CONV_PHASES = ("fwd", "bwd_dx", "bwd_dw")
+GEMM_PHASES = ("fwd", "bwd_dx", "bwd_dw")
 SIMD_PHASES = ("fwd", "bwd")
 
 
@@ -74,6 +75,60 @@ def fc(name: str, n: int, fan_in: int, fan_out: int, has_bias: bool = True,
                      phase=phase, kind="fc")
 
 
+@dataclass(frozen=True)
+class GemmLayer:
+    """Plain GEMM out[m, n] = in[m, k] @ w[k, n] (+ bias[n]) on the
+    systolic array — attention/MLP projections map onto the weight-
+    stationary array without im2col: k along the J rows (the reduction
+    dim, like ``ic``), n along the K columns (like ``oc``), m streamed
+    (like the batch-spatial dim).  A GEMM m x n x k is cost-equivalent to
+    ``fc(n=m, ic=k, oc=n)``; keeping it a first-class type preserves the
+    M/N/K vocabulary, the per-head/per-expert ``count`` multiplicity, and
+    the ``param`` distinction the training expansion needs.
+
+    ``count`` repeats the identical GEMM (e.g. batch x heads attention
+    score GEMMs): every cost quantity scales linearly, the tiling does
+    not depend on it.  ``param=False`` marks activation-activation GEMMs
+    (attention scores, A·V) whose "weight" operand is itself an
+    activation: the training expansion still emits both operand
+    gradients but skips the parameter update."""
+    name: str
+    m: int          # rows of the output (streamed dim)
+    n: int          # cols of the output (mapped on the K array columns)
+    k: int          # reduction dim (mapped on the J array rows)
+    has_bias: bool = False
+    phase: str = "fwd"          # fwd | bwd_dx | bwd_dw
+    kind: str = "gemm"
+    count: int = 1
+    param: bool = True
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.n * self.k * self.count
+
+    @property
+    def weight_elems(self) -> int:
+        return self.k * self.n
+
+    @property
+    def out_elems(self) -> int:
+        return self.m * self.n
+
+    @property
+    def in_elems(self) -> int:
+        return self.m * self.k
+
+    @property
+    def is_backward(self) -> bool:
+        return self.phase != "fwd"
+
+
+def gemm(name: str, m: int, n: int, k: int, has_bias: bool = False,
+         phase: str = "fwd", count: int = 1, param: bool = True) -> GemmLayer:
+    return GemmLayer(name=name, m=m, n=n, k=k, has_bias=has_bias,
+                     phase=phase, count=count, param=param)
+
+
 # ---------------------------------------------------------------------------
 # SIMD-array layers: the generic tile template
 # ---------------------------------------------------------------------------
@@ -126,10 +181,15 @@ class SimdLayer:
 
 
 def phase_key(layer) -> str:
-    """Namespaced engine:phase tag of a layer ('conv:fwd', 'conv:bwd_dw',
+    """Namespaced engine:phase tag of a layer ('conv:fwd', 'gemm:bwd_dw',
     'simd:bwd', ...) — the key space shared by the simulator's per-phase
     aggregates and the DSE phase-resolved cost attribution."""
-    family = "conv" if isinstance(layer, ConvLayer) else "simd"
+    if isinstance(layer, ConvLayer):
+        family = "conv"
+    elif isinstance(layer, GemmLayer):
+        family = "gemm"
+    else:
+        family = "simd"
     return f"{family}:{layer.phase}"
 
 
@@ -303,3 +363,102 @@ def bias_grad(name: str, oh: int, ow: int, n: int, oc: int) -> SimdLayer:
         tensors=(TensorRef("4d", "in"), TensorRef("1d", "out")),
         ops4d=("add",))
     return SimdLayer(name, "bias_grad", oh, ow, n, oc, (part,), "bwd")
+
+
+# -- transformer / LLM non-GEMM ops (same generic tile template) -------------
+#
+# These route softmax/layernorm/rotary/activation through the SIMD model
+# exactly like the paper's non-conv ops.  Iteration spaces put the
+# normalized/rotated feature dimension on ``c`` (the SIMD lanes) and the
+# token count on the h/n dims, so per-feature 1D tensors (gamma, beta)
+# land in the per-c-tile placement the template already models.
+
+def rmsnorm(name: str, tokens: int, d: int, phase: str = "fwd") -> SimdLayer:
+    """y = gamma * x / rms(x): a stats pass (sum of squares per token,
+    finalized with a reciprocal sqrt) and a scale pass (2 mul/element)."""
+    p1 = SimdPart(
+        tensors=(TensorRef("4d", "in"), TensorRef("1d", "out")),
+        ops4d=("mul", "add"),
+        ops1d=("mul", "rsqrt"))
+    p2 = SimdPart(
+        tensors=(TensorRef("4d", "in"), TensorRef("1d", "in"),
+                 TensorRef("4d", "out")),
+        ops4d=("mul", "mul"))
+    return SimdLayer(name, "rmsnorm", tokens, 1, 1, d, (p1, p2), phase)
+
+
+def layer_norm(name: str, tokens: int, d: int, phase: str = "fwd") -> SimdLayer:
+    """Full LayerNorm: BN-style two-pass schedule (mean/var stats, then
+    y = a*x + b with a = gamma*psi, b = beta - a*mu folded per feature)."""
+    p1 = SimdPart(
+        tensors=(TensorRef("4d", "in"),
+                 TensorRef("1d", "out"), TensorRef("1d", "out")),
+        ops4d=("add", "mul", "add"),
+        ops1d=("mul", "mul", "sub", "rsqrt"))
+    p2 = SimdPart(
+        tensors=(TensorRef("4d", "in"),
+                 TensorRef("1d", "in"), TensorRef("1d", "in"),
+                 TensorRef("4d", "out")),
+        ops4d=("mul", "add"),
+        ops1d=("mul", "mul", "sub"))
+    return SimdLayer(name, "layernorm", tokens, 1, 1, d, (p1, p2), phase)
+
+
+def softmax(name: str, rows: int, cols: int, phase: str = "fwd") -> SimdLayer:
+    """Row-wise softmax over ``cols`` entries (attention scores, router
+    logits): online max, shifted exp with running sum, then the rescale —
+    5 ops per element (max, sub, exp, add, mul)."""
+    part = SimdPart(
+        tensors=(TensorRef("4d", "in"), TensorRef("4d", "out")),
+        ops4d=("max", "sub", "exp", "add", "mul"))
+    return SimdLayer(name, "softmax", rows, 1, 1, cols, (part,), phase)
+
+
+def rotary(name: str, tokens: int, d: int, phase: str = "fwd") -> SimdLayer:
+    """Rotary position embedding: y = x*cos +- rot(x)*sin — reads the
+    activations plus the (sin, cos) tables, 2 mul + 1 add per element."""
+    part = SimdPart(
+        tensors=(TensorRef("4d", "in"), TensorRef("4d", "in"),
+                 TensorRef("4d", "in"), TensorRef("4d", "out")),
+        ops4d=("mul", "mul", "add"))
+    return SimdLayer(name, "rotary", tokens, 1, 1, d, (part,), phase)
+
+
+def conv1d(name: str, tokens: int, d: int, width: int,
+           phase: str = "fwd") -> SimdLayer:
+    """Depthwise causal short convolution over the sequence (the
+    mamba2 / RG-LRU ``conv_width``-tap conv): ``width`` MACs per output
+    element, reading the activation window and the per-channel taps."""
+    part = SimdPart(
+        tensors=(TensorRef("4d", "in"), TensorRef("4d", "in"),
+                 TensorRef("4d", "out")),
+        ops4d=("mul", "add") * width)
+    return SimdLayer(name, "conv1d", tokens, 1, 1, d, (part,), phase)
+
+
+def elementwise_scan(name: str, tokens: int, d: int, kind: str = "ssm",
+                     phase: str = "fwd") -> SimdLayer:
+    """Elementwise recurrence update (SSD state blend / RG-LRU gate
+    recurrence): per element, the gate nonlinearity plus the decay
+    multiply-accumulate into the carried state."""
+    part = SimdPart(
+        tensors=(TensorRef("4d", "in"), TensorRef("4d", "in"),
+                 TensorRef("4d", "out")),
+        ops4d=("exp", "mul", "mul", "add", "mul", "add"))
+    return SimdLayer(name, f"scan_{kind}", tokens, 1, 1, d, (part,), phase)
+
+
+def activation(name: str, tokens: int, d: int, act: str = "silu",
+               gated: bool = False, phase: str = "fwd") -> SimdLayer:
+    """Pointwise activation (silu/gelu both cost a sigmoid-like kernel:
+    exp, add, div, then the gating mul).  ``gated=True`` adds the second
+    (up-projection) operand and its elementwise product — the fused
+    act(gate) * up of gated MLPs."""
+    tensors = [TensorRef("4d", "in")]
+    ops: Tuple[str, ...] = ("exp", "add", "div", "mul")
+    if gated:
+        tensors.append(TensorRef("4d", "in"))
+        ops = ops + ("mul",)
+    tensors.append(TensorRef("4d", "out"))
+    part = SimdPart(tensors=tuple(tensors), ops4d=ops)
+    return SimdLayer(name, f"act_{act}", tokens, 1, 1, d, (part,), phase)

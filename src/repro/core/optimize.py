@@ -43,8 +43,9 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from .dse import (DSEPoint, DSEResult, _GridEngine, batch_build_conv_tables,
-                  get_conv_table, get_simd_table, prefetch_conv_tables,
-                  _tuples, register_search_method)
+                  batch_build_gemm_tables, get_conv_table, get_gemm_table,
+                  get_simd_table, prefetch_conv_tables, _tuples,
+                  register_search_method)
 from .energy import DEFAULT_ENERGY, EnergyModel, compute_energy_batch
 from .hardware import KB, HardwareSpec
 from .objectives import Cycles, MetricBatch, Objective, resolve_objective
@@ -153,36 +154,48 @@ class _RefineEvaluator:
         return out
 
     def _conv_fill(self, name: str, need: Dict[tuple, List[tuple]]) -> None:
+        """Fill the array-side projection memo — conv *and* GEMM layers
+        share the (size triple, bw triple) coordinates, so both fold
+        into the same cycle memo and 6-tuple energy components."""
         memo = self._conv[name]
         e_memo = self._conv_e[name]
         cols = self.eng.conv_cols[name]
+        gcols = self.eng.gemm_cols[name]
         hws = [self.hw.replace(wbuf=s3[0] * KB, ibuf=s3[1] * KB,
                                obuf=s3[2] * KB) for s3 in need]
         if self.workers > 1:
             prefetch_conv_tables(hws, self.eng._conv_union, self.workers)
         # whole neighborhoods of uncached size triples are batch-built in
-        # one vectorized pass per layer (the serial fast path)
+        # one vectorized pass per layer (the serial fast path); both
+        # builders are clean no-ops on an empty shape union
         batch_build_conv_tables(hws, self.eng._conv_union)
+        batch_build_gemm_tables(hws, self.eng._gemm_union)
         for s3, b3s in need.items():
             self._s3_seen[name].add(s3)
             hw = self.hw.replace(wbuf=s3[0] * KB, ibuf=s3[1] * KB,
                                  obuf=s3[2] * KB)
-            table = get_conv_table(hw, self.eng._conv_union)
-            if cols:
-                per_layer = table.layer_cycles_batch(
-                    [b[0] for b in b3s], [b[1] for b in b3s],
-                    [b[2] for b in b3s])
-                vals = per_layer[:, cols].sum(axis=1).astype(np.int64)
+            bw_w = [b[0] for b in b3s]
+            bw_i = [b[1] for b in b3s]
+            bw_o = [b[2] for b in b3s]
+            vals = np.zeros(len(b3s), dtype=np.int64)
+            e = [0, 0, 0, 0, 0, 0]
+            for table, tcols in (
+                    ((get_conv_table(hw, self.eng._conv_union)
+                      if cols else None), cols),
+                    ((get_gemm_table(hw, self.eng._gemm_union)
+                      if gcols else None), gcols)):
+                if not tcols:
+                    continue
+                per_layer = table.layer_cycles_batch(bw_w, bw_i, bw_o)
+                vals += per_layer[:, tcols].sum(axis=1).astype(np.int64)
                 if s3 not in e_memo:
-                    e_memo[s3] = (int(table.busy[cols].sum()),
-                                  int(table.sram["wbuf"][cols].sum()),
-                                  int(table.sram["ibuf"][cols].sum()),
-                                  int(table.sram["obuf"][cols].sum()),
-                                  int(table.sram["bbuf"][cols].sum()),
-                                  int(table.dram[cols].sum()))
-            else:
-                vals = np.zeros(len(b3s), dtype=np.int64)
-                e_memo.setdefault(s3, (0, 0, 0, 0, 0, 0))
+                    e[0] += int(table.busy[tcols].sum())
+                    e[1] += int(table.sram["wbuf"][tcols].sum())
+                    e[2] += int(table.sram["ibuf"][tcols].sum())
+                    e[3] += int(table.sram["obuf"][tcols].sum())
+                    e[4] += int(table.sram["bbuf"][tcols].sum())
+                    e[5] += int(table.dram[tcols].sum())
+            e_memo.setdefault(s3, tuple(e))
             for b3, v in zip(b3s, vals):
                 memo[(s3, b3)] = int(v)
 
@@ -310,13 +323,20 @@ class _RefineEvaluator:
         one configuration, so they partition the point's total exactly."""
         sz, bw = point.sizes_kb, point.bws
         out: Dict[str, int] = {}
+        hw = self.hw.replace(wbuf=sz[0] * KB, ibuf=sz[1] * KB,
+                             obuf=sz[2] * KB)
         pcols = self.eng.conv_phase_cols[name]
         if pcols:
-            hw = self.hw.replace(wbuf=sz[0] * KB, ibuf=sz[1] * KB,
-                                 obuf=sz[2] * KB)
             table = get_conv_table(hw, self.eng._conv_union)
             per_layer = table.layer_cycles_batch([bw[0]], [bw[1]], [bw[2]])
             for ph, cols in pcols.items():
+                out[ph] = int(per_layer[:, cols].sum(axis=1)
+                              .astype(np.int64)[0])
+        gpcols = self.eng.gemm_phase_cols[name]
+        if gpcols:
+            table = get_gemm_table(hw, self.eng._gemm_union)
+            per_layer = table.layer_cycles_batch([bw[0]], [bw[1]], [bw[2]])
+            for ph, cols in gpcols.items():
                 out[ph] = int(per_layer[:, cols].sum(axis=1)
                               .astype(np.int64)[0])
         pids = self.eng.simd_phase_ids[name]
@@ -458,6 +478,81 @@ def _lattice_neighbors(tup: Tup, values: Sequence[int], lo: float, hi: float
     return sorted(out)
 
 
+def _grow_repair_lattice(tup: Tup, i: int, notches: int,
+                         values: Sequence[int], lo: float, hi: float
+                         ) -> Optional[Tup]:
+    """Grow coordinate i by ``notches`` ladder steps, then pay for it by
+    notching the *smallest* other coordinates down until the sum is back
+    in [lo, hi].  Smallest-first repair deliberately complements
+    ``_repair``'s largest-first policy: it concentrates the budget on
+    the grown coordinate instead of leveling the split."""
+    cur: Optional[Tup] = tup
+    for _ in range(notches):
+        cur = _ladder_move(cur, i, values, up=True)
+        if cur is None:
+            return None
+    for _ in range(64):
+        s = sum(cur)
+        if s <= hi:
+            return cur if lo <= s else None
+        moved = None
+        for j in sorted((j for j in range(4) if j != i),
+                        key=lambda j: (cur[j], j)):
+            moved = _ladder_move(cur, j, values, up=False)
+            if moved is not None:
+                break
+        if moved is None:
+            return None
+        cur = moved
+    return None
+
+
+def _grow_repair_step(tup: Tup, i: int, grow: int, step: int,
+                      vmin: int, vmax: int, lo: float, hi: float
+                      ) -> Optional[Tup]:
+    """Arithmetic ``_grow_repair_lattice``: add ``grow`` to coordinate i
+    (clamped to vmax), repair smallest-first in ``step`` decrements."""
+    if tup[i] + grow > vmax:
+        return None
+    cur = list(tup)
+    cur[i] += grow
+    for _ in range(64):
+        s = sum(cur)
+        if s <= hi:
+            return tuple(cur) if lo <= s else None
+        js = [j for j in range(4) if j != i and cur[j] - step >= vmin]
+        if not js:
+            return None
+        j = min(js, key=lambda j: (cur[j], j))
+        cur[j] -= step
+    return None
+
+
+def _joint_moves(sizes_tup: Tup, bws_tup: Tup,
+                 s_grow, b_grow) -> List[Cand]:
+    """Paired size+bandwidth moves: grow buffer i *and* its feed
+    bandwidth together, each paid for by the smallest other coordinates.
+    Coordinate descent over sizes-only / bws-only neighborhoods misses
+    optima where a buffer and its bandwidth must move as one (a bigger
+    IBuf only pays once the input stream is also fed faster — each
+    single-axis move is uphill, the pair is downhill; observed on the
+    16x16 training fixture).  ``s_grow(i, n)`` / ``b_grow(i, n)`` map a
+    coordinate and a grow amount to a repaired tuple or None."""
+    out: List[Cand] = []
+    for i in range(4):
+        ss = [s for n in (1, 2, 3)
+              for s in [s_grow(i, n)] if s is not None]
+        bs = [b for n in (1, 2, 3)
+              for b in [b_grow(i, n)] if b is not None]
+        for s in ss:
+            if s == sizes_tup:
+                continue
+            for b in bs:
+                if b != bws_tup:
+                    out.append((s, b))
+    return out
+
+
 def _step_neighbors(tup: Tup, step: int, vmin: int, vmax: int,
                     lo: float, hi: float) -> List[Tup]:
     """Refinement levels: single-coordinate +-{1,2,4}*step moves plus
@@ -590,14 +685,27 @@ def _refine_one(ev: _RefineEvaluator, name: str, cfg: RefineConfig,
             if level == 0:
                 s_nb = _lattice_neighbors(cur[0], sizes, *s_band)
                 b_nb = _lattice_neighbors(cur[1], bws, *b_band)
+                joint = _joint_moves(
+                    cur[0], cur[1],
+                    lambda i, n: _grow_repair_lattice(cur[0], i, n,
+                                                      sizes, *s_band),
+                    lambda i, n: _grow_repair_lattice(cur[1], i, n,
+                                                      bws, *b_band))
                 stride = 0
             else:
                 stp = steps[level - 1]
                 s_nb = _step_neighbors(cur[0], stp, vmin_s, vmax_s, *s_band)
                 b_nb = _step_neighbors(cur[1], stp, vmin_b, vmax_b, *b_band)
+                joint = _joint_moves(
+                    cur[0], cur[1],
+                    lambda i, n: _grow_repair_step(cur[0], i, n * stp, stp,
+                                                   vmin_s, vmax_s, *s_band),
+                    lambda i, n: _grow_repair_step(cur[1], i, n * stp, stp,
+                                                   vmin_b, vmax_b, *b_band))
                 stride = stp
             cands = sorted({(s, cur[1]) for s in s_nb}
-                           | {(cur[0], b) for b in b_nb})
+                           | {(cur[0], b) for b in b_nb}
+                           | set(joint))
             room = max_evals - ev.n_evals(name)
             if cands and room > 0:
                 cands = ev.filter_budget(name, cands, room)

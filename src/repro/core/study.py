@@ -46,7 +46,7 @@ from .dse import (BWS, SEARCH_METHODS, SIZES_KB, DSEPoint, DSEResult, Layer,
                   clear_table_caches, resolve_backend, table_cache_stats)
 from .energy import DEFAULT_ENERGY, EnergyModel
 from .hardware import KB, HardwareSpec
-from .layers import ConvLayer, SimdLayer
+from .layers import ConvLayer, GemmLayer, SimdLayer
 from .objectives import Objective, resolve_objective
 from .store import TableStore, env_int, store_context
 
@@ -101,8 +101,10 @@ def _reference_point_cycles(hw_base: HardwareSpec,
     derivation + per-layer simulator, bypassing every cache and table so
     a poisoned ``ConvTable``/``SimdTable`` cannot vouch for itself."""
     from .conv_model import simulate_conv
+    from .gemm_model import simulate_gemm
     from .simd_model import simulate_simd
     from .tiling import (derive_conv_tiling_reference,
+                         derive_gemm_tiling_reference,
                          derive_simd_tiling_reference)
     wb, ib, ob, vm = point.sizes_kb
     bw_w, bw_i, bw_o, bw_v = point.bws
@@ -114,6 +116,9 @@ def _reference_point_cycles(hw_base: HardwareSpec,
         if isinstance(layer, ConvLayer):
             t = derive_conv_tiling_reference(hw, layer)
             total += simulate_conv(hw, layer, t).total_cycles
+        elif isinstance(layer, GemmLayer):
+            t = derive_gemm_tiling_reference(hw, layer)
+            total += simulate_gemm(hw, layer, t).total_cycles
         else:
             t = derive_simd_tiling_reference(hw, layer)
             total += simulate_simd(hw, layer, t).total_cycles
@@ -124,23 +129,34 @@ def _reference_point_cycles(hw_base: HardwareSpec,
 class Workload:
     """What runs on the accelerator: a network, a phase, a batch size.
 
-    ``net`` is either a name in ``repro.core.networks.NETWORKS`` or an
-    explicit layer sequence (stored as a tuple).  ``training=True``
-    selects the Table I training expansion (and, for named networks, the
-    BN-bearing graph); ``batch`` defaults to the paper's setup — 1 for
-    inference, 32 for training (Sec. VII-A) — and only applies to named
-    networks (an explicit layer list already fixes its batch)."""
+    ``net`` is either a name in ``repro.core.networks.NETWORKS``, an LLM
+    config name (``repro.models.frontends.llm_config_names`` — lowered
+    to a GEMM + SIMD graph), or an explicit layer sequence (stored as a
+    tuple).  ``training=True`` selects the Table I training expansion
+    (and, for named CNNs, the BN-bearing graph); ``batch`` defaults to
+    the paper's setup for CNNs — 1 for inference, 32 for training
+    (Sec. VII-A) — and to 1 for LLM configs (their token count is
+    ``batch * seq``); it only applies to named networks (an explicit
+    layer list already fixes its batch).  ``seq`` sets the LLM sequence
+    length (default ``LLM_SEQ_DEFAULT``) and is invalid elsewhere."""
     net: Union[str, Tuple[Layer, ...]]
     training: bool = False
     batch: Optional[int] = None
     name: Optional[str] = None
+    seq: Optional[int] = None
 
     def __post_init__(self):
         if not isinstance(self.net, (str, tuple)):
             object.__setattr__(self, "net", tuple(self.net))
-        if not isinstance(self.net, str) and self.batch is not None:
-            raise ValueError("batch applies to named networks only; an "
-                             "explicit layer list already fixes its batch")
+        if not isinstance(self.net, str):
+            if self.batch is not None:
+                raise ValueError("batch applies to named networks only; an "
+                                 "explicit layer list already fixes its "
+                                 "batch")
+            if self.seq is not None:
+                raise ValueError("seq applies to named LLM configs only; "
+                                 "an explicit layer list already fixes "
+                                 "its shapes")
 
     @property
     def label(self) -> str:
@@ -151,13 +167,31 @@ class Workload:
 
     def layers(self) -> List[Layer]:
         """The concrete layer list, training-expanded when asked.  Named
-        networks follow ``simulate``'s conventions: BN layers appear only
-        in training graphs (inference graphs are BN-folded)."""
+        CNNs follow ``simulate``'s conventions: BN layers appear only in
+        training graphs (inference graphs are BN-folded).  Names not in
+        the CNN registry resolve as LLM configs and lower to a GEMM +
+        SIMD graph (``repro.models.frontends.lower_llm``)."""
         if isinstance(self.net, str):
             from .networks import NETWORKS
-            batch = self.batch if self.batch is not None \
-                else (32 if self.training else 1)
-            net = NETWORKS[self.net](batch, bn=self.training)
+            if self.net in NETWORKS:
+                if self.seq is not None:
+                    raise ValueError(
+                        f"seq applies to LLM configs only; {self.net!r} "
+                        f"is a CNN registry network")
+                batch = self.batch if self.batch is not None \
+                    else (32 if self.training else 1)
+                net = NETWORKS[self.net](batch, bn=self.training)
+            else:
+                from ..models.frontends import (llm_config_names,
+                                                lower_llm,
+                                                resolve_llm_config)
+                cfg = resolve_llm_config(self.net)
+                if cfg is None:
+                    raise ValueError(
+                        f"unknown network {self.net!r}; registered CNN "
+                        f"networks: {sorted(NETWORKS)}; LLM configs: "
+                        f"{llm_config_names()}")
+                net = lower_llm(cfg, batch=self.batch or 1, seq=self.seq)
         else:
             net = list(self.net)
         return expand_training_graph(net) if self.training else net
@@ -172,7 +206,7 @@ def as_workload(w: Union[Workload, str, Sequence[Layer]]) -> Workload:
     if isinstance(w, str):
         return Workload(net=w)
     if isinstance(w, Sequence) and all(
-            isinstance(l, (ConvLayer, SimdLayer)) for l in w):
+            isinstance(l, (ConvLayer, GemmLayer, SimdLayer)) for l in w):
         return Workload(net=tuple(w))
     raise TypeError(f"cannot interpret {w!r} as a Workload")
 

@@ -49,7 +49,7 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 from .hardware import HardwareSpec
-from .layers import ConvLayer, SimdLayer
+from .layers import ConvLayer, GemmLayer, SimdLayer
 
 
 def ceil_div(a: int, b: int) -> int:
@@ -69,12 +69,14 @@ def ceil_div(a: int, b: int) -> int:
 
 _CONV_TILING_CACHE: Dict[tuple, "ConvTiling"] = {}
 _SIMD_TILING_CACHE: Dict[tuple, "SimdTiling"] = {}
+_GEMM_TILING_CACHE: Dict[tuple, "GemmTiling"] = {}
 
 
 def clear_tiling_caches() -> None:
     """Drop all memoized tilings (used by benchmarks for fair timing)."""
     _CONV_TILING_CACHE.clear()
     _SIMD_TILING_CACHE.clear()
+    _GEMM_TILING_CACHE.clear()
 
 
 def _conv_hw_key(hw: HardwareSpec) -> tuple:
@@ -85,6 +87,10 @@ def _conv_hw_key(hw: HardwareSpec) -> tuple:
 def _conv_layer_key(layer: ConvLayer) -> tuple:
     return (layer.n, layer.ic, layer.ih, layer.iw, layer.oc, layer.oh,
             layer.ow, layer.kh, layer.kw, layer.s, layer.has_bias)
+
+
+def _gemm_layer_key(layer: GemmLayer) -> tuple:
+    return (layer.m, layer.n, layer.k, layer.has_bias)
 
 
 def _simd_hw_key(hw: HardwareSpec) -> tuple:
@@ -621,6 +627,219 @@ def prefill_conv_tilings(hw: HardwareSpec,
             continue
         seen.add(lk)
         conv_tilings_for_triples(hw, size_triples, layer)
+
+
+# ---------------------------------------------------------------------------
+# GEMM tiling
+#
+# M/N/K blocking of out[m, n] = in[m, k] @ w[k, n] against the same three
+# double-buffered SRAMs: the (T_k, T_n) weight block lives in WBuf, the
+# (T_m, T_k) input block in IBuf, the (T_m, T_n) psum block in OBuf.  The
+# greedy is the exact specialization of the conv walk under the
+# fc-equivalence (a GEMM m x n x k prices like ``fc(n=m, ic=k, oc=n)``:
+# unit kernel window, unit spatial extents, batch = m) — the kernel-shrink
+# phase vanishes, the T_ic/T_oc phases become T_k/T_n, and the three
+# spatial growth dims collapse onto the single streamed dim m.  The
+# fc-equivalence is pinned bit-identical in tests/test_gemm.py.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GemmTiling:
+    """Outer blocks (T_m, T_k, T_n) + inner systolic tiles (t_k, t_n)."""
+    T_m: int; T_k: int; T_n: int
+    t_k: int; t_n: int
+
+    def weight_tile_elems(self) -> int:
+        return self.T_k * self.T_n
+
+    def input_tile_elems(self) -> int:
+        return self.T_m * self.T_k
+
+    def psum_tile_elems(self) -> int:
+        return self.T_m * self.T_n
+
+
+def gemm_tile_fits(hw: HardwareSpec, layer: GemmLayer, t: GemmTiling) -> bool:
+    """Validity: every outer block fits its (half, double-buffered) SRAM."""
+    if t.weight_tile_elems() * hw.b_w // 8 > hw.wbuf // 2:
+        return False
+    if t.input_tile_elems() * hw.b_i // 8 > hw.ibuf // 2:
+        return False
+    if t.psum_tile_elems() * hw.b_p // 8 > hw.obuf // 2:
+        return False
+    if layer.has_bias and t.T_n * hw.b_b // 8 > hw.bbuf // 2:
+        return False
+    for tv, dim in ((t.T_m, layer.m), (t.T_k, layer.k), (t.T_n, layer.n)):
+        if not (1 <= tv <= dim):
+            return False
+    return True
+
+
+def make_gemm_tiling(hw: HardwareSpec, layer: GemmLayer) -> GemmTiling:
+    """Memoized scalar front-end: a one-candidate slice of the batched
+    derivation below (single code path with the DSE grid fill)."""
+    key = (_conv_hw_key(hw), _gemm_layer_key(layer))
+    t = _GEMM_TILING_CACHE.get(key)
+    if t is None:
+        t = _GEMM_TILING_CACHE[key] = derive_gemm_tilings_batch(
+            hw, [(hw.wbuf, hw.ibuf, hw.obuf)], layer)[0]
+    return t
+
+
+def derive_gemm_tilings_batch(hw: HardwareSpec,
+                              size_triples: Sequence[Tuple[int, int, int]],
+                              layer: GemmLayer) -> List[GemmTiling]:
+    """Derive the greedy GEMM blocking for every (wbuf, ibuf, obuf) byte
+    triple at once — the GEMM analogue of ``derive_conv_tilings_batch``,
+    bit-identical per candidate to ``derive_gemm_tiling_reference``."""
+    fields = _derive_gemm_tiling_arrays(hw, size_triples, layer)
+    return [GemmTiling(*vals)
+            for vals in zip(*(a.tolist() for a in fields))]
+
+
+def _derive_gemm_tiling_arrays(hw: HardwareSpec,
+                               size_triples: Sequence[Tuple[int, int, int]],
+                               layer: GemmLayer) -> Tuple[np.ndarray, ...]:
+    """The batched greedy kernel in struct-of-arrays form
+    ``(T_m, T_k, T_n, t_k, t_n)`` (int64, one lane per triple)."""
+    tri = np.asarray([(t[0], t[1], t[2]) for t in size_triples],
+                     dtype=np.int64).reshape(-1, 3)
+    n = len(tri)
+    wcap = tri[:, 0] // 2 * 8 // hw.b_w
+    icap = tri[:, 1] // 2 * 8 // hw.b_i
+    ocap = tri[:, 2] // 2 * 8 // hw.b_p
+    k0 = min(hw.K, layer.n)
+
+    # 1) maximize T_k (J-aligned) with minimal T_n, then grow T_n within
+    #    WBuf — doubling plus the exact K-aligned remainder fill.
+    v = wcap // k0
+    T_k = np.where(v >= hw.J, np.maximum(hw.J, v // hw.J * hw.J), v)
+    T_k = np.maximum(1, np.minimum(T_k, layer.k))
+
+    def grow_n(T_n: np.ndarray) -> np.ndarray:
+        while True:
+            m = (T_n * 2 <= layer.n) & (T_k * T_n * 2 <= wcap)
+            if not m.any():
+                break
+            T_n = np.where(m, T_n * 2, T_n)
+        T_n = np.minimum(T_n, layer.n)
+        cap_n = wcap // T_k
+        fill = np.minimum(layer.n, np.maximum(k0, cap_n // k0 * k0))
+        return np.where(cap_n >= layer.n, layer.n,
+                        np.where(cap_n >= k0,
+                                 np.maximum(T_n, fill), T_n))
+
+    T_n = grow_n(np.full(n, k0, dtype=np.int64))
+
+    # IBuf may bound T_k (a single m-row of the input block must fit);
+    # freed WBuf capacity is re-offered to T_n, like the conv walk.
+    while True:
+        m = (T_k > 1) & (T_k > icap)
+        if not m.any():
+            break
+        T_k = np.where(m, T_k // 2, T_k)
+    T_n = grow_n(T_n)
+
+    # 2) stream dim growth under IBuf and OBuf: doubling, then the exact
+    #    padding-aware remainder fill (the capacity bound inverts in
+    #    closed form, so no bisection is needed).
+    T_m = np.ones(n, dtype=np.int64)
+
+    def hi_m():
+        return np.minimum(layer.m,
+                          np.minimum(icap // T_k, ocap // T_n))
+
+    while True:
+        cand = np.minimum(T_m * 2, layer.m)
+        m = (cand > T_m) & (cand <= hi_m())
+        if not m.any():
+            break
+        T_m = np.where(m, cand, T_m)
+    T_m = _fill_dim_batch(T_m, layer.m, hi=hi_m())
+
+    t_k = np.minimum(hw.J, T_k)
+    t_n = np.minimum(hw.K, T_n)
+
+    # Validity (vector ``gemm_tile_fits``) with the unit-block fallback.
+    ok = ((T_k * T_n * hw.b_w // 8 <= tri[:, 0] // 2)
+          & (T_m * T_k * hw.b_i // 8 <= tri[:, 1] // 2)
+          & (T_m * T_n * hw.b_p // 8 <= tri[:, 2] // 2))
+    if layer.has_bias:
+        ok &= T_n * hw.b_b // 8 <= hw.bbuf // 2
+    for tv, dim in ((T_m, layer.m), (T_k, layer.k), (T_n, layer.n)):
+        ok &= (1 <= tv) & (tv <= dim)
+    fb_k = min(hw.J, layer.k)
+    fb_n = min(hw.K, layer.n)
+    T_m = np.where(ok, T_m, 1)
+    T_k = np.where(ok, T_k, fb_k)
+    T_n = np.where(ok, T_n, fb_n)
+    t_k = np.where(ok, t_k, fb_k)
+    t_n = np.where(ok, t_n, fb_n)
+
+    return (T_m, T_k, T_n, t_k, t_n)
+
+
+def derive_gemm_tiling_reference(hw: HardwareSpec,
+                                 layer: GemmLayer) -> GemmTiling:
+    """The scalar greedy walk, retained as the independently written
+    reference the batched kernel is pinned against."""
+    wcap = hw.wbuf // 2 * 8 // hw.b_w
+    icap = hw.ibuf // 2 * 8 // hw.b_i
+    ocap = hw.obuf // 2 * 8 // hw.b_p
+    k0 = min(hw.K, layer.n)
+
+    T_k = min(layer.k, _align_down(wcap // k0, hw.J))
+    T_k = max(1, min(T_k, layer.k))
+
+    def grow_n(T_n: int) -> int:
+        while T_n * 2 <= layer.n and T_k * T_n * 2 <= wcap:
+            T_n *= 2
+        T_n = min(T_n, layer.n)
+        cap_n = wcap // T_k
+        if cap_n >= layer.n:
+            return layer.n
+        if cap_n >= k0:
+            return max(T_n, min(layer.n, _align_down(cap_n, k0)))
+        return T_n
+
+    T_n = grow_n(k0)
+    while T_k > 1 and T_k > icap:
+        T_k = max(1, T_k // 2)
+    T_n = grow_n(T_n)
+
+    T_m = 1
+
+    def fits(m: int) -> bool:
+        return m * T_k <= icap and m * T_n <= ocap
+
+    while T_m < layer.m and fits(min(T_m * 2, layer.m)):
+        T_m = min(T_m * 2, layer.m)
+    T_m = _fill_dim(T_m, layer.m, fits)
+
+    t = GemmTiling(T_m=T_m, T_k=T_k, T_n=T_n,
+                   t_k=min(hw.J, T_k), t_n=min(hw.K, T_n))
+    if not gemm_tile_fits(hw, layer, t):
+        fb_k, fb_n = min(hw.J, layer.k), min(hw.K, layer.n)
+        t = GemmTiling(1, fb_k, fb_n, t_k=fb_k, t_n=fb_n)
+    return t
+
+
+def gemm_tilings_for_triples(hw: HardwareSpec,
+                             size_triples: Sequence[Tuple[int, int, int]],
+                             layer: GemmLayer) -> List[GemmTiling]:
+    """Cache-aware batch accessor (the GEMM twin of
+    ``conv_tilings_for_triples``)."""
+    base = _conv_hw_key(hw)
+    lk = _gemm_layer_key(layer)
+    keys = [((int(t[0]), int(t[1]), int(t[2])) + base[3:], lk)
+            for t in size_triples]
+    miss = [i for i, k in enumerate(keys) if k not in _GEMM_TILING_CACHE]
+    if miss:
+        derived = derive_gemm_tilings_batch(
+            hw, [size_triples[i] for i in miss], layer)
+        for i, t in zip(miss, derived):
+            _GEMM_TILING_CACHE[keys[i]] = t
+    return [_GEMM_TILING_CACHE[k] for k in keys]
 
 
 # ---------------------------------------------------------------------------

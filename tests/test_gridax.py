@@ -120,6 +120,85 @@ def test_fused_backend_matches(table8):
 
 
 # ---------------------------------------------------------------------------
+# GEMM / transformer workloads: same bit-identity pins, LLM front-end
+# ---------------------------------------------------------------------------
+
+LLM_GRID = (32, 64, 128, 256)
+LLM_BWS = (8, 16, 32, 64)
+LLM_KB, LLM_BW = 512, 64
+
+
+def _llm_setup(phase):
+    if phase == "training":
+        return TRAIN_PRESETS[16], Workload("qwen3_0_6b", training=True,
+                                           seq=64)
+    return INFER_PRESETS[16], Workload("qwen3_0_6b", seq=64)
+
+
+@pytest.fixture(scope="module")
+def llm_grid():
+    """qwen3-0.6b lowered through the GEMM front-end, both phases, all
+    objectives, numpy and jax backends on a reduced lattice."""
+    out = {}
+    for phase in PHASES:
+        hw, wl = _llm_setup(phase)
+        for backend in ("numpy", "jax"):
+            study = Study(hw, sizes=LLM_GRID, bws=LLM_BWS, backend=backend)
+            for obj in OBJECTIVES:
+                out[phase, backend, obj] = study.search(
+                    wl, LLM_KB, LLM_BW, objective=obj)
+    return out
+
+
+@pytest.mark.parametrize("phase", PHASES)
+@pytest.mark.parametrize("obj", OBJECTIVES)
+def test_llm_backend_bit_identity(llm_grid, phase, obj):
+    a = llm_grid[phase, "numpy", obj]
+    b = llm_grid[phase, "jax", obj]
+    assert a.best == b.best
+    assert a.worst == b.worst
+    for frac in (0.05, 0.15, 0.5):
+        assert a.within(frac) == b.within(frac)
+    assert np.array_equal(a.grid.costs, b.grid.costs)
+    if obj != "cycles":
+        assert np.array_equal(np.asarray(a.grid_scores, dtype=float),
+                              np.asarray(b.grid_scores, dtype=float))
+    assert a.pareto() == b.pareto()
+
+
+@pytest.mark.parametrize("phase", PHASES)
+def test_llm_scalar_reference_ground_truth(llm_grid, phase):
+    hw, wl = _llm_setup(phase)
+    ref = search_reference(hw, wl.layers(), LLM_KB, LLM_BW,
+                           sizes=LLM_GRID, bws=LLM_BWS)
+    res = llm_grid[phase, "jax", "cycles"]
+    assert res.best == ref.best
+    assert res.worst == ref.worst
+    assert res.within(0.15) == ref.within(0.15)
+
+
+@pytest.mark.parametrize("phase", PHASES)
+def test_llm_fused_backend_matches(llm_grid, phase):
+    hw, wl = _llm_setup(phase)
+    rf = Study(hw, sizes=LLM_GRID, bws=LLM_BWS,
+               backend="jax-fused").search(wl, LLM_KB, LLM_BW)
+    rn = llm_grid[phase, "numpy", "cycles"]
+    assert rf.best == rn.best
+    assert rf.worst == rn.worst
+    assert rf.within(0.15) == rn.within(0.15)
+    assert np.array_equal(rf.grid.costs, rn.grid.costs)
+
+
+def test_llm_phase_breakdown_partitions(llm_grid):
+    pb = llm_grid["training", "jax", "cycles"].phase_breakdown()
+    res = llm_grid["training", "jax", "cycles"]
+    assert pb.total == res.best.cycles
+    d = pb.as_dict()
+    assert d.get("gemm:fwd", 0) > 0 and d.get("gemm:bwd_dx", 0) > 0
+    assert d.get("conv:fwd", 0) == 0           # zero-conv workload
+
+
+# ---------------------------------------------------------------------------
 # gridax unit-level identities (synthetic int64 grids past 2**31)
 # ---------------------------------------------------------------------------
 

@@ -132,6 +132,23 @@ def test_lattice_refine_reproduces_grid_best(table8, jk):
     assert rl.n_candidates * 10 <= g.n_candidates
 
 
+def test_lattice_refine_reproduces_grid_best_training(table8):
+    """Regression (joint size+bw blind spot): on the 16x16 *training*
+    fixture the only in-band lattice point better than the coordinate
+    descent's resting point needs IBuf grown two notches (paid by
+    OBuf/VMem) *and* input bandwidth grown one notch (paid by
+    weight/output bandwidth) in a single move — each axis alone is
+    uphill.  The grow-and-repair joint move covers it; pinned here as
+    bit-identical to the exhaustive grid optimum, with the evaluation
+    saving intact."""
+    budget, g, _ = table8[("training", 16)]
+    rl = search(_hw(TRAIN_PRESETS, 16), resnet50(32, bn=True),
+                budget, budget, training=True, method="refine",
+                refine=RefineConfig(lattice_only=True))
+    assert rl.best == g.best
+    assert rl.n_candidates * 10 <= g.n_candidates
+
+
 def test_lattice_refine_reproduces_search_reference():
     """...and bit-identically the scalar brute-force loop itself, on the
     smallest Table VIII budget (the two exhaustive paths are pinned equal
