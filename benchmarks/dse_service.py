@@ -1,0 +1,140 @@
+"""DSE-as-a-service smoke: N coalesced clients vs N sequential searches.
+
+The serving claim is economic: a burst of concurrent queries answered
+through one ``DSEService`` shares grouped ``search_many`` dispatches and
+union-of-shape table builds, so it must build strictly fewer cost tables
+(and take less wall time) than the same N queries issued as isolated
+cold searches.  Three passes over one mixed burst (2 networks x 2
+budgets x 2 objectives, inference + training):
+
+  * ``seq_cold``  — every query a fresh cold ``Study.search`` (L1
+    cleared between queries, no store): the "N independent scripts"
+    baseline.
+  * ``svc_cold``  — the same burst submitted before the dispatcher
+    starts, served coalesced against an empty persistent store.
+  * ``svc_warm``  — the burst again, L1 dropped, store warm: serving
+    steady-state (store hits only, zero rebuilds).
+
+Asserted, not just reported: every service response bit-identical to its
+sequential reference, cold-service builds < sequential builds,
+coalescing ratio > 1, and the warm pass rebuilds nothing.  The derived
+columns carry the headline numbers (speedup, coalescing ratio, build
+counts, p95 latency) for the bench-trajectory artifact.
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import List
+
+from repro.core import INFER_PRESETS
+from repro.core.dse import clear_table_caches, table_cache_stats
+from repro.core.layers import ConvLayer, batch_norm, fc, relu
+from repro.core.study import Study, Workload
+from repro.serve import DSEClient, DSERequest, DSEService
+
+from .common import row, timed
+
+HW16 = INFER_PRESETS[16]
+GRID = (32, 64, 128, 256)
+
+
+def _train_net():
+    def conv(name, **kw):
+        base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16,
+                    ow=16, kh=3, kw=3, s=1, has_bias=False)
+        base.update(kw)
+        return ConvLayer(**base)
+    return (conv("c1"), batch_norm("c1.bn", 16, 16, 1, 32),
+            relu("c1.relu", 16, 16, 1, 32), conv("c2", ic=32, oc=32),
+            fc("fc", 1, 2048, 10))
+
+
+def _requests() -> List[DSERequest]:
+    train = Workload(net=_train_net(), training=True, name="tiny-train")
+    return [
+        DSERequest("resnet18", 512, 256, objective="cycles"),
+        DSERequest("resnet18", 256, 256, objective="edp"),
+        DSERequest("alexnet", 512, 256, objective="edp"),
+        DSERequest("alexnet", 256, 256, objective="cycles"),
+        DSERequest(train, 512, 256, objective="cycles"),
+        DSERequest(train, 256, 256, objective="edp"),
+    ]
+
+
+def _study(store=None) -> Study:
+    return Study(HW16, sizes=GRID, bws=GRID, tol=0.5, store=store)
+
+
+def _builds() -> int:
+    s = table_cache_stats()
+    return sum(int(s[f"{k}_builds"]) for k in ("conv", "simd", "gemm"))
+
+
+def _serve_burst(store: str):
+    """Submit the whole burst before the dispatcher starts (maximal
+    coalescing, deterministic), then gather; returns (us, results, stats,
+    builds_delta)."""
+    reqs = _requests()
+    svc = DSEService(_study(store), autostart=False, max_batch=len(reqs))
+    tickets = DSEClient(svc).submit_burst(reqs)
+    b0 = _builds()
+
+    def serve():
+        svc.start()
+        return [t.result(timeout=600) for t in tickets]
+
+    us, results = timed(serve)
+    svc.close()
+    return us, results, svc.stats(), _builds() - b0
+
+
+def run(tag: str = "dse_service") -> List[str]:
+    rows: List[str] = []
+    reqs = _requests()
+
+    # -- seq_cold: N isolated cold searches (the no-service baseline) --
+    seq_results, seq_us, seq_builds = [], 0.0, 0
+    for r in reqs:
+        clear_table_caches()
+        us, res = timed(_study().search, r.workload, r.size_budget_kb,
+                        r.bw_budget, objective=r.objective)
+        seq_us += us
+        seq_builds += _builds()
+        seq_results.append(res)
+    rows.append(row(f"{tag}.seq_cold", seq_us,
+                    f"queries={len(reqs)};builds={seq_builds};"
+                    f"per_query_us={seq_us / len(reqs):.0f}"))
+
+    with tempfile.TemporaryDirectory(prefix="repro-serve-") as store:
+        # -- svc_cold: the same burst, coalesced, empty store ----------
+        clear_table_caches()
+        svc_us, svc_results, st, svc_builds = _serve_burst(store)
+        assert st.completed == len(reqs) and st.failed == 0, st.summary()
+        assert st.coalescing_ratio > 1.0, st.summary()
+        assert svc_builds < seq_builds, (svc_builds, seq_builds)
+        for mine, ref in zip(svc_results, seq_results):
+            assert mine.best == ref.best
+            assert (mine.grid.costs == ref.grid.costs).all()
+        rows.append(row(
+            f"{tag}.svc_cold", svc_us,
+            f"speedup={seq_us / svc_us:.2f}x;"
+            f"coalescing={st.coalescing_ratio:.2f}x;"
+            f"builds={svc_builds}_vs_seq{seq_builds};"
+            f"p95_ms={st.latency_p95_s * 1e3:.1f}"))
+
+        # -- svc_warm: L1 dropped, store warm: lookups only ------------
+        clear_table_caches()
+        warm_us, warm_results, wst, warm_builds = _serve_burst(store)
+        assert warm_builds == 0, table_cache_stats()
+        assert wst.store_hit_rate > 0.0, wst.summary()
+        for mine, ref in zip(warm_results, seq_results):
+            assert mine.best == ref.best
+            assert (mine.grid.costs == ref.grid.costs).all()
+        rows.append(row(
+            f"{tag}.svc_warm", warm_us,
+            f"speedup_vs_seq={seq_us / warm_us:.2f}x;"
+            f"speedup_vs_cold={svc_us / warm_us:.2f}x;"
+            f"rebuilds={warm_builds};"
+            f"store_hit_rate={wst.store_hit_rate:.2f}"))
+    clear_table_caches()
+    return rows

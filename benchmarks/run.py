@@ -23,18 +23,18 @@ def main() -> None:
                     help="emit a JSON array instead of CSV rows")
     args = ap.parse_args()
 
-    from . import (dse_scaling, fig5_stall_models, fig12_sensitivity,
-                   llm_dse, pareto_energy, refine_vs_grid,
-                   store_persistence, table6_resnet50, table7_resnet18,
-                   table8_dse, table9_dse_networks, table10_economic,
-                   table11_training_dse)
+    from . import (dse_scaling, dse_service, fig5_stall_models,
+                   fig12_sensitivity, llm_dse, pareto_energy,
+                   refine_vs_grid, store_persistence, table6_resnet50,
+                   table7_resnet18, table8_dse, table9_dse_networks,
+                   table10_economic, table11_training_dse)
     from . import roofline_bench
 
     modules = [table6_resnet50, table7_resnet18, fig5_stall_models,
                table8_dse, table9_dse_networks, table10_economic,
                table11_training_dse, llm_dse, refine_vs_grid,
                pareto_energy, fig12_sensitivity, roofline_bench,
-               dse_scaling, store_persistence]
+               dse_scaling, store_persistence, dse_service]
 
     records = []
     failures = 0

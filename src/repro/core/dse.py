@@ -80,6 +80,7 @@ from __future__ import annotations
 
 import itertools
 import os
+import threading
 import time
 from dataclasses import dataclass, field, replace
 from functools import lru_cache
@@ -391,6 +392,16 @@ _CONV_TABLE_CACHE: Dict[tuple, ConvTable] = {}
 _SIMD_TABLE_CACHE: Dict[tuple, SimdTable] = {}
 _GEMM_TABLE_CACHE: Dict[tuple, GemmTable] = {}
 _PREFETCHED_UNTOUCHED: set = set()      # parallel/store loads not yet fetched
+# One lock guards every L1 dict, the miss-accounting set, and the stat
+# counters: the serving subsystem (``repro.serve``) drives these caches
+# from a dispatcher thread plus arbitrary client threads, where unlocked
+# check-then-build races would double-build tables and `+=` on the
+# counters would lose updates.  Reentrant because a build path may call
+# back into another getter (e.g. a store load validating against the
+# cache).  Held across table construction on purpose: the barrier test
+# in tests/test_dse_threadsafety.py pins "concurrent identical gets
+# build exactly once".
+_CACHE_LOCK = threading.RLock()
 _TABLE_CACHE_STATS = {"conv_hits": 0, "conv_misses": 0,
                       "simd_hits": 0, "simd_misses": 0,
                       "gemm_hits": 0, "gemm_misses": 0,
@@ -422,54 +433,59 @@ def get_conv_table(hw: HardwareSpec, layers: Sequence[ConvLayer]) -> ConvTable:
     """Shared, process-lifetime ConvTable constructor — the L1 over the
     optional persistent store (``core.store``): an in-memory miss first
     consults the active store (validated, checksummed load) and only
-    builds on a store miss, writing the fresh table back."""
+    builds on a store miss, writing the fresh table back.  Thread-safe:
+    the whole check-then-build is one critical section, so concurrent
+    identical gets build exactly once."""
     key = _conv_table_key(hw, layers)
-    t = _CONV_TABLE_CACHE.get(key)
-    if t is not None:
-        if key in _PREFETCHED_UNTOUCHED:
-            # First retrieval of a parallel-prefetched (or store-seeded)
-            # table: account it as the miss the caller's serial loop
-            # would have recorded, so hit/miss statistics are identical
-            # between workers=0/>1 and store on/off.
-            _PREFETCHED_UNTOUCHED.discard(key)
-            _TABLE_CACHE_STATS["conv_misses"] += 1
-        else:
-            _TABLE_CACHE_STATS["conv_hits"] += 1
-        return t
-    _TABLE_CACHE_STATS["conv_misses"] += 1
-    store = active_store()
-    if store is not None:
-        t = store.load("conv", key, ConvTable)
+    with _CACHE_LOCK:
+        t = _CONV_TABLE_CACHE.get(key)
         if t is not None:
-            _CONV_TABLE_CACHE[key] = t
+            if key in _PREFETCHED_UNTOUCHED:
+                # First retrieval of a parallel-prefetched (or store-seeded)
+                # table: account it as the miss the caller's serial loop
+                # would have recorded, so hit/miss statistics are identical
+                # between workers=0/>1 and store on/off.
+                _PREFETCHED_UNTOUCHED.discard(key)
+                _TABLE_CACHE_STATS["conv_misses"] += 1
+            else:
+                _TABLE_CACHE_STATS["conv_hits"] += 1
             return t
-    _TABLE_CACHE_STATS["conv_builds"] += 1
-    t = _CONV_TABLE_CACHE[key] = ConvTable(hw, layers)
-    if store is not None:
-        store.save("conv", key, t)
-    return t
+        _TABLE_CACHE_STATS["conv_misses"] += 1
+        store = active_store()
+        if store is not None:
+            t = store.load("conv", key, ConvTable)
+            if t is not None:
+                _CONV_TABLE_CACHE[key] = t
+                return t
+        _TABLE_CACHE_STATS["conv_builds"] += 1
+        t = _CONV_TABLE_CACHE[key] = ConvTable(hw, layers)
+        if store is not None:
+            store.save("conv", key, t)
+        return t
 
 
 def get_simd_table(hw: HardwareSpec, layers: Sequence[SimdLayer]) -> SimdTable:
     """Shared, process-lifetime SimdTable constructor (L1 over the
-    optional persistent store, like ``get_conv_table``)."""
+    optional persistent store, like ``get_conv_table``; same
+    single-build thread-safety contract)."""
     key = _simd_table_key(hw, layers)
-    t = _SIMD_TABLE_CACHE.get(key)
-    if t is not None:
-        _TABLE_CACHE_STATS["simd_hits"] += 1
-        return t
-    _TABLE_CACHE_STATS["simd_misses"] += 1
-    store = active_store()
-    if store is not None:
-        t = store.load("simd", key, SimdTable)
+    with _CACHE_LOCK:
+        t = _SIMD_TABLE_CACHE.get(key)
         if t is not None:
-            _SIMD_TABLE_CACHE[key] = t
+            _TABLE_CACHE_STATS["simd_hits"] += 1
             return t
-    _TABLE_CACHE_STATS["simd_builds"] += 1
-    t = _SIMD_TABLE_CACHE[key] = SimdTable(hw, layers)
-    if store is not None:
-        store.save("simd", key, t)
-    return t
+        _TABLE_CACHE_STATS["simd_misses"] += 1
+        store = active_store()
+        if store is not None:
+            t = store.load("simd", key, SimdTable)
+            if t is not None:
+                _SIMD_TABLE_CACHE[key] = t
+                return t
+        _TABLE_CACHE_STATS["simd_builds"] += 1
+        t = _SIMD_TABLE_CACHE[key] = SimdTable(hw, layers)
+        if store is not None:
+            store.save("simd", key, t)
+        return t
 
 
 def get_gemm_table(hw: HardwareSpec, layers: Sequence[GemmLayer]) -> GemmTable:
@@ -478,26 +494,27 @@ def get_gemm_table(hw: HardwareSpec, layers: Sequence[GemmLayer]) -> GemmTable:
     ``"gemm"``).  Seeded entries from ``batch_build_gemm_tables`` count a
     miss on first retrieval, keeping statistics path-independent."""
     key = _gemm_table_key(hw, layers)
-    t = _GEMM_TABLE_CACHE.get(key)
-    if t is not None:
-        if key in _PREFETCHED_UNTOUCHED:
-            _PREFETCHED_UNTOUCHED.discard(key)
-            _TABLE_CACHE_STATS["gemm_misses"] += 1
-        else:
-            _TABLE_CACHE_STATS["gemm_hits"] += 1
-        return t
-    _TABLE_CACHE_STATS["gemm_misses"] += 1
-    store = active_store()
-    if store is not None:
-        t = store.load("gemm", key, GemmTable)
+    with _CACHE_LOCK:
+        t = _GEMM_TABLE_CACHE.get(key)
         if t is not None:
-            _GEMM_TABLE_CACHE[key] = t
+            if key in _PREFETCHED_UNTOUCHED:
+                _PREFETCHED_UNTOUCHED.discard(key)
+                _TABLE_CACHE_STATS["gemm_misses"] += 1
+            else:
+                _TABLE_CACHE_STATS["gemm_hits"] += 1
             return t
-    _TABLE_CACHE_STATS["gemm_builds"] += 1
-    t = _GEMM_TABLE_CACHE[key] = GemmTable(hw, layers)
-    if store is not None:
-        store.save("gemm", key, t)
-    return t
+        _TABLE_CACHE_STATS["gemm_misses"] += 1
+        store = active_store()
+        if store is not None:
+            t = store.load("gemm", key, GemmTable)
+            if t is not None:
+                _GEMM_TABLE_CACHE[key] = t
+                return t
+        _TABLE_CACHE_STATS["gemm_builds"] += 1
+        t = _GEMM_TABLE_CACHE[key] = GemmTable(hw, layers)
+        if store is not None:
+            store.save("gemm", key, t)
+        return t
 
 
 def _build_conv_table(args) -> ConvTable:
@@ -538,6 +555,12 @@ def batch_build_conv_tables(hws: Sequence[HardwareSpec],
         # zero-conv networks (pure GEMM/SIMD transformers): nothing to
         # derive, and an empty table would only pollute the cache
         return
+    with _CACHE_LOCK:
+        _batch_build_conv_tables_locked(hws, layers)
+
+
+def _batch_build_conv_tables_locked(hws: Sequence[HardwareSpec],
+                                    layers: List[ConvLayer]) -> None:
     # one layers-part tuple shared by every per-variant cache key (the
     # inner tuple of _conv_table_key, hoisted out of the hw loop)
     lpart = tuple((_conv_layer_key(l), l.phase) for l in layers)
@@ -611,6 +634,12 @@ def batch_build_gemm_tables(hws: Sequence[HardwareSpec],
     layers = list(layers)
     if not layers:
         return
+    with _CACHE_LOCK:
+        _batch_build_gemm_tables_locked(hws, layers)
+
+
+def _batch_build_gemm_tables_locked(hws: Sequence[HardwareSpec],
+                                    layers: List[GemmLayer]) -> None:
     lpart = tuple((_gemm_layer_key(l), l.count, l.phase) for l in layers)
     missing = [(key, hw) for hw in dict.fromkeys(hws)
                if (key := (_conv_hw_key(hw), lpart))
@@ -731,10 +760,12 @@ def prefetch_conv_tables(hws: Sequence[HardwareSpec],
         # zero-conv networks: never spin up a pool for an empty union
         return
     store = active_store()
-    missing = [(key, hw) for hw in dict.fromkeys(hws)
-               if (key := _conv_table_key(hw, layers))
-               not in _CONV_TABLE_CACHE
-               and not (store is not None and store.contains("conv", key))]
+    with _CACHE_LOCK:
+        missing = [(key, hw) for hw in dict.fromkeys(hws)
+                   if (key := _conv_table_key(hw, layers))
+                   not in _CONV_TABLE_CACHE
+                   and not (store is not None
+                            and store.contains("conv", key))]
     if workers <= 1 or len(missing) < 2:
         return
     from concurrent.futures import TimeoutError as FutTimeout
@@ -752,12 +783,13 @@ def prefetch_conv_tables(hws: Sequence[HardwareSpec],
     layers = tuple(layers)
 
     def seed(key: tuple, table: ConvTable) -> None:
-        _CONV_TABLE_CACHE[key] = table
-        _PREFETCHED_UNTOUCHED.add(key)
-        _TABLE_CACHE_STATS["conv_parallel_builds"] += 1
-        _TABLE_CACHE_STATS["conv_builds"] += 1
-        if store is not None:
-            store.save("conv", key, table)
+        with _CACHE_LOCK:
+            _CONV_TABLE_CACHE[key] = table
+            _PREFETCHED_UNTOUCHED.add(key)
+            _TABLE_CACHE_STATS["conv_parallel_builds"] += 1
+            _TABLE_CACHE_STATS["conv_builds"] += 1
+            if store is not None:
+                store.save("conv", key, table)
 
     for attempt in range(retries + 1):
         n = min(int(workers), len(missing))
@@ -809,12 +841,16 @@ def table_cache_stats() -> Dict[str, object]:
     (validated on-disk loads), misses, quarantined corruptions, LRU
     evictions and lock-wait timeouts; ``conv_builds``/``simd_builds``
     count actual table constructions across every path, so a warm-store
-    sweep is assertable as "store hits only, zero builds"."""
-    stats = dict(_TABLE_CACHE_STATS,
-                 conv_entries=len(_CONV_TABLE_CACHE),
-                 simd_entries=len(_SIMD_TABLE_CACHE),
-                 gemm_entries=len(_GEMM_TABLE_CACHE))
-    stats.update(store_stats())
+    sweep is assertable as "store hits only, zero builds".  The counter
+    copy is taken under the cache lock, so callers (e.g. the service
+    metrics snapshot in ``repro.serve``) always see a consistent cut —
+    never a miss without its matching build."""
+    with _CACHE_LOCK:
+        stats = dict(_TABLE_CACHE_STATS,
+                     conv_entries=len(_CONV_TABLE_CACHE),
+                     simd_entries=len(_SIMD_TABLE_CACHE),
+                     gemm_entries=len(_GEMM_TABLE_CACHE))
+        stats.update(store_stats())
     stats["by_kind"] = {
         "conv": {"hits": stats["conv_hits"], "misses": stats["conv_misses"],
                  "entries": stats["conv_entries"],
@@ -837,13 +873,14 @@ def clear_table_caches() -> None:
     """Drop all cached tables and zero the counters (benchmark fairness).
     The persistent store's *files* are untouched — surviving the death of
     the in-memory cache is their whole point — but its counters reset."""
-    _CONV_TABLE_CACHE.clear()
-    _SIMD_TABLE_CACHE.clear()
-    _GEMM_TABLE_CACHE.clear()
-    _PREFETCHED_UNTOUCHED.clear()
-    for k in _TABLE_CACHE_STATS:
-        _TABLE_CACHE_STATS[k] = 0
-    reset_store_stats()
+    with _CACHE_LOCK:
+        _CONV_TABLE_CACHE.clear()
+        _SIMD_TABLE_CACHE.clear()
+        _GEMM_TABLE_CACHE.clear()
+        _PREFETCHED_UNTOUCHED.clear()
+        for k in _TABLE_CACHE_STATS:
+            _TABLE_CACHE_STATS[k] = 0
+        reset_store_stats()
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,13 @@ Known fault points (the arg is point-specific):
                        writers
 ``selfcheck_perturb``  reserved for tests that poison a cached table to
                        prove the DSE self-check mode catches drift
+``service_batch_exc``  a ``repro.serve`` grouped dispatch raises before
+                       pricing — the service must degrade to per-request
+                       serial evaluation, not drop the batch
+``service_request_hang``  a ``repro.serve`` pricing call sleeps ``arg``
+                       seconds (default 3600), tripping the service
+                       watchdog; in degraded serial mode only the hung
+                       request times out
 =====================  =====================================================
 
 Counts are consumed in the process that *queries* the fault point.  The

@@ -211,6 +211,54 @@ def as_workload(w: Union[Workload, str, Sequence[Layer]]) -> Workload:
     raise TypeError(f"cannot interpret {w!r} as a Workload")
 
 
+@dataclass(frozen=True)
+class SweepRequest:
+    """One self-contained DSE query: workload + budgets + metric + method.
+
+    ``search_many`` prices several *workloads* under ONE budget pair and
+    objective; a ``SweepRequest`` additionally carries its own budgets,
+    objective, and front-end, so heterogeneous queries — different
+    networks, budgets, objectives, inference and training — become plain
+    values that can be queued, grouped, and deduplicated.  This is the
+    unit the serving subsystem (``repro.serve``) moves around; the
+    synchronous batch entry is ``Study.search_requests``.
+
+    ``objective`` is a registered name or an ``Objective`` instance.
+    Requests group (and dedup) on string names by value and on instances
+    by *identity*: two ``CyclesUnderPowerCap(cap_w=...)`` objects with
+    different caps share a class-level ``name``, so identity is the only
+    safe sharing key — pass the same instance to queries that should
+    coalesce."""
+    workload: Workload
+    size_budget_kb: int
+    bw_budget: int
+    objective: Union[str, Objective, None] = "cycles"
+    method: str = "grid"
+
+    def __post_init__(self):
+        object.__setattr__(self, "workload", as_workload(self.workload))
+
+    def _objective_token(self):
+        obj = self.objective
+        if obj is None:
+            return "cycles"
+        return obj if isinstance(obj, str) else id(obj)
+
+    @property
+    def group_key(self) -> tuple:
+        """Requests with equal group keys are priced by ONE
+        ``search_many`` call (same budgets/objective/method — only the
+        workloads differ)."""
+        return (int(self.size_budget_kb), int(self.bw_budget),
+                self._objective_token(), self.method)
+
+    @property
+    def dedup_key(self) -> tuple:
+        """Full query identity: equal keys mean bit-identical answers,
+        so in-flight duplicates can share one result."""
+        return (self.workload, *self.group_key)
+
+
 class Study:
     """One design-space study: hardware base + candidate space + caches.
 
@@ -370,6 +418,40 @@ class Study:
         return self.search_many({key: wl}, size_budget_kb, bw_budget,
                                 objective=objective, method=method,
                                 refine=refine)[key]
+
+    def search_requests(self, requests: Sequence[SweepRequest]
+                        ) -> List[DSEResult]:
+        """Batch-of-workloads entry: price heterogeneous ``SweepRequest``s
+        and fan the results back out in request order.
+
+        Requests are grouped on ``SweepRequest.group_key`` (same budgets,
+        objective, method) and each group runs as ONE ``search_many``
+        call over its workloads, so the group shares union-of-layer-shape
+        table builds; across groups, the process-lifetime table caches
+        still dedup every size-triple window the budgets overlap on.
+        Each result is bit-identical to a standalone ``search`` of the
+        same request — the per-network costs of a shared ``search_many``
+        are column gathers over the union tables with unchanged summation
+        order (pinned in tests/test_service.py).
+
+        This is the synchronous coalescing primitive; ``repro.serve``
+        wraps it with a queue, admission control, deduplication, fault
+        isolation, and metrics."""
+        requests = [r if isinstance(r, SweepRequest) else SweepRequest(*r)
+                    for r in requests]
+        groups: Dict[tuple, List[int]] = {}
+        for i, req in enumerate(requests):
+            groups.setdefault(req.group_key, []).append(i)
+        out: List[Optional[DSEResult]] = [None] * len(requests)
+        for idx in groups.values():
+            head = requests[idx[0]]
+            res = self.search_many(
+                {f"q{i}": requests[i].workload for i in idx},
+                head.size_budget_kb, head.bw_budget,
+                objective=head.objective, method=head.method)
+            for i in idx:
+                out[i] = res[f"q{i}"]
+        return out
 
     # ---- cache ownership --------------------------------------------------
 

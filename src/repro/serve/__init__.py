@@ -1,0 +1,27 @@
+"""repro.serve — DSE-as-a-service: concurrent sweep serving.
+
+Public surface::
+
+    from repro.serve import DSEService, DSEClient, DSERequest
+
+    svc = DSEService(Study(...))
+    client = DSEClient(svc)
+    result = client.query("resnet18", size_budget_kb=512, bw_budget=16)
+    print(svc.stats().summary())
+
+See ``service.py`` for the architecture (micro-batching, coalescing,
+admission control, graceful degradation) and ``metrics.py`` for the
+``ServiceStats`` snapshot semantics.
+"""
+from .client import DSEClient
+from .metrics import ServiceMetrics, ServiceStats, percentile
+from .service import (AdmissionError, DSERequest, DSEService,
+                      InvalidRequest, RequestFailed, RequestTimeout,
+                      ServiceError, Ticket)
+
+__all__ = [
+    "DSEClient", "DSEService", "DSERequest", "Ticket",
+    "ServiceError", "AdmissionError", "InvalidRequest",
+    "RequestFailed", "RequestTimeout",
+    "ServiceMetrics", "ServiceStats", "percentile",
+]

@@ -1,0 +1,175 @@
+"""Thread-safety of the process-lifetime table caches (core.dse).
+
+The serving subsystem (``repro.serve``) drives ``get_conv_table`` /
+``get_simd_table`` / ``get_gemm_table`` and ``table_cache_stats()`` from
+a dispatcher thread plus arbitrary client threads.  Before the cache
+lock landed, two threads racing the same uncached key could both observe
+the miss and both build (wasted work AND two distinct table objects in
+flight), and the bare ``+=`` on the stat counters could lose updates.
+These tests pin the repaired contract: concurrent identical gets build
+exactly once and return the same object, counters are exact under
+contention, and fully concurrent end-to-end searches stay bit-identical
+to serial ones."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import INFER_PRESETS, Study, Workload
+from repro.core.dse import (clear_table_caches, get_conv_table,
+                            get_gemm_table, get_simd_table,
+                            table_cache_stats)
+from repro.core.layers import ConvLayer, GemmLayer, relu
+
+HW16 = INFER_PRESETS[16]
+GRID = (32, 64, 128, 256)
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    clear_table_caches()
+    yield
+    clear_table_caches()
+
+
+def _race(n_threads, fn):
+    """Run ``fn(tid)`` on ``n_threads`` barrier-synchronized threads and
+    return the per-thread results; re-raise the first worker exception."""
+    barrier = threading.Barrier(n_threads)
+    out = [None] * n_threads
+    errs = []
+
+    def work(tid):
+        try:
+            barrier.wait()
+            out[tid] = fn(tid)
+        except BaseException as exc:                 # noqa: BLE001
+            errs.append(exc)
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errs:
+        raise errs[0]
+    return out
+
+
+# ---- the regression: barrier-synchronized double-submit --------------------
+
+def test_double_submit_builds_conv_table_exactly_once():
+    """Two threads released by a barrier onto the SAME uncached conv key
+    must come back with the same table object and one recorded build —
+    the unlocked cache double-built here."""
+    layers = (_conv("c1"), _conv("c2", ic=32, oc=32))
+    tables = _race(2, lambda tid: get_conv_table(HW16, layers))
+    assert tables[0] is tables[1]
+    st = table_cache_stats()
+    assert st["conv_builds"] == 1, st
+    # one thread took the miss+build, the other the hit (or, if it
+    # arrived before the build finished, waited on the lock and hit)
+    assert st["conv_misses"] == 1 and st["conv_hits"] == 1, st
+
+
+def test_double_submit_simd_and_gemm_single_build():
+    simd = (relu("r1", 16, 16, 1, 32),)
+    gemm = (GemmLayer(name="g1", m=64, k=256, n=64),)
+
+    simd_tables = _race(2, lambda tid: get_simd_table(HW16, simd))
+    gemm_tables = _race(2, lambda tid: get_gemm_table(HW16, gemm))
+
+    assert simd_tables[0] is simd_tables[1]
+    assert gemm_tables[0] is gemm_tables[1]
+    st = table_cache_stats()
+    assert st["simd_builds"] == 1 and st["gemm_builds"] == 1, st
+
+
+def test_many_threads_many_keys_build_each_key_once():
+    """8 threads x 4 distinct conv keys, all racing: every key built
+    exactly once, and every thread holds the same object per key."""
+    keysets = [(_conv(f"k{i}", ic=16 + 16 * i),) for i in range(4)]
+
+    def work(tid):
+        return [get_conv_table(HW16, ks) for ks in keysets]
+
+    results = _race(8, work)
+    for per_key in zip(*results):
+        assert all(t is per_key[0] for t in per_key)
+    st = table_cache_stats()
+    assert st["conv_builds"] == len(keysets), st
+
+
+# ---- counter exactness under contention ------------------------------------
+
+def test_hit_counters_exact_under_contention():
+    """After one warm build, N threads x M lookups must record exactly
+    N*M hits — the unlocked ``+=`` lost updates under contention."""
+    layers = (_conv("c1"),)
+    get_conv_table(HW16, layers)                     # warm: 1 miss, 1 build
+    n_threads, m_hits = 8, 50
+
+    def work(tid):
+        for _ in range(m_hits):
+            get_conv_table(HW16, layers)
+
+    _race(n_threads, work)
+    st = table_cache_stats()
+    assert st["conv_hits"] == n_threads * m_hits, st
+    assert st["conv_misses"] == 1 and st["conv_builds"] == 1, st
+
+
+def test_stats_snapshot_is_consistent_while_mutating():
+    """``table_cache_stats()`` snapshots under the cache lock: sampled
+    mid-storm it must never show more builds than misses (a torn read of
+    the counter dict could)."""
+    stop = threading.Event()
+    keys = [(_conv(f"s{i}", ic=16 + 16 * i),) for i in range(3)]
+
+    def mutate(tid):
+        i = 0
+        while not stop.is_set():
+            get_conv_table(HW16, keys[i % len(keys)])
+            i += 1
+
+    def sample(tid):
+        for _ in range(200):
+            st = table_cache_stats()
+            assert st["conv_builds"] <= st["conv_misses"], st
+        stop.set()
+
+    threads = [threading.Thread(target=mutate, args=(t,)) for t in range(3)]
+    threads.append(threading.Thread(target=sample, args=(3,)))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    stop.set()
+    assert not any(t.is_alive() for t in threads)
+
+
+# ---- end-to-end: concurrent searches bit-identical -------------------------
+
+def test_concurrent_searches_bit_identical_to_serial():
+    """Four threads running full grid searches through one Study (shared
+    caches, no store) must each match the serial answer bit-for-bit."""
+    study = Study(HW16, sizes=GRID, bws=GRID, tol=0.5, store=None)
+    wl = Workload(net=(_conv("c1"), relu("r1", 16, 16, 1, 32),
+                       _conv("c2", ic=32, oc=32)), name="tiny")
+    queries = [(wl, 512, 256), ("alexnet", 512, 256),
+               (wl, 256, 256), ("alexnet", 256, 256)]
+
+    results = _race(4, lambda tid: study.search(*queries[tid]))
+    clear_table_caches()
+    for (q, res) in zip(queries, results):
+        ref = study.search(*q)
+        assert res.best == ref.best
+        assert np.array_equal(res.grid.costs, ref.grid.costs)

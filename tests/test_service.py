@@ -1,0 +1,315 @@
+"""repro.serve: the DSE-as-a-service subsystem.
+
+The load-bearing contract is equivalence: every result a ``DSEService``
+hands back — through any amount of micro-batching, grouping, dedup, and
+degraded serial retry — is bit-identical to a direct synchronous
+``Study.search`` of the same request.  On top of that this file pins the
+service-specific behaviors: coalescing actually saves table builds over
+sequential cold queries, identical in-flight requests share one pricing,
+admission control bounds the queue, a poisoned request fails alone with
+a structured error while its batchmates complete, and the
+``service_batch_exc``/``service_request_hang`` fault points degrade a
+grouped dispatch to per-request serial evaluation instead of dropping
+the batch."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import INFER_PRESETS, Study, Workload, faultinject
+from repro.core.dse import clear_table_caches, table_cache_stats
+from repro.core.layers import ConvLayer, batch_norm, fc, pool, relu
+from repro.core.store import TableStore, clear_default_store
+from repro.serve import (AdmissionError, DSEClient, DSERequest, DSEService,
+                         InvalidRequest, RequestFailed, RequestTimeout,
+                         ServiceError)
+
+HW16 = INFER_PRESETS[16]
+GRID = (32, 64, 128, 256)
+
+
+def _conv(name, **kw):
+    base = dict(name=name, n=1, ic=16, ih=16, iw=16, oc=32, oh=16, ow=16,
+                kh=3, kw=3, s=1, has_bias=True)
+    base.update(kw)
+    return ConvLayer(**base)
+
+
+def tiny_net():
+    return [
+        _conv("c1"),
+        relu("r1", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32, has_bias=False),
+        pool("p1", 8, 8, 1, 32, 2, 2),
+        fc("fc", 1, 2048, 100),
+    ]
+
+
+def tiny_train_net():
+    return [
+        _conv("c1", has_bias=False),
+        batch_norm("c1.bn", 16, 16, 1, 32),
+        relu("c1.relu", 16, 16, 1, 32),
+        _conv("c2", ic=32, oc=32),
+        fc("fc", 1, 2048, 10),
+    ]
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    faultinject.reset()
+    clear_default_store()
+    clear_table_caches()
+    yield
+    faultinject.reset()
+    clear_default_store()
+    clear_table_caches()
+
+
+def _study(**kw):
+    kw.setdefault("store", None)
+    return Study(HW16, sizes=GRID, bws=GRID, tol=0.5, **kw)
+
+
+def _same_result(a, b):
+    """Bit-identity between two grid DSEResults: same optimum AND the
+    same full cost surface (not just the argmin)."""
+    assert a.best == b.best
+    assert a.worst == b.worst
+    assert np.array_equal(a.grid.costs, b.grid.costs)
+
+
+# ---- acceptance: concurrent mixed burst ------------------------------------
+
+def test_concurrent_burst_bit_identical_coalesced_clean_store(tmp_path):
+    """The PR's acceptance scenario: 8 mixed queries (2+ networks x 2
+    budgets x 3 objectives, inference AND training) submitted from 4
+    client threads, served coalesced off a shared store — every response
+    bit-identical to a fresh synchronous ``Study.search``, measured
+    coalescing ratio > 1, and zero quarantine debris in the store."""
+    store_root = tmp_path / "store"
+    train_wl = Workload(net=tuple(tiny_train_net()), training=True,
+                        name="tiny-train")
+    reqs = [
+        DSERequest("resnet18", 512, 256, objective="cycles"),
+        DSERequest("resnet18", 256, 256, objective="edp"),
+        DSERequest("alexnet", 512, 256, objective="edp"),
+        DSERequest("alexnet", 256, 256, objective="cycles"),
+        DSERequest(train_wl, 512, 256, objective="cycles"),
+        DSERequest(train_wl, 256, 256, objective="edp"),
+        DSERequest("resnet18", 512, 256, objective="energy"),
+        DSERequest("alexnet", 512, 256, objective="cycles"),
+    ]
+    svc = DSEService(_study(store=str(store_root)), autostart=False,
+                     max_batch=len(reqs))
+    client = DSEClient(svc)
+    tickets = [None] * len(reqs)
+    barrier = threading.Barrier(4)
+
+    def submitter(tid):
+        barrier.wait()
+        for i in range(tid, len(reqs), 4):
+            tickets[i] = client.submit(reqs[i])
+
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    svc.start()                       # whole burst lands in one drain
+    results = [t.result(timeout=600) for t in tickets]
+    svc.close()
+
+    st = svc.stats()
+    assert st.submitted == len(reqs) and st.completed == len(reqs)
+    assert st.failed == 0 and st.degraded_batches == 0
+    # grouping happened: 5 distinct (budget, objective) groups priced 8
+    # requests, so strictly fewer searches than requests
+    assert st.searches < len(reqs)
+    assert st.coalescing_ratio > 1.0
+    assert st.batch_occupancy > 1.0
+
+    # every answer == a direct synchronous search on a fresh Study over
+    # the same store (bit-identical, not approximately equal)
+    ref = _study(store=str(store_root))
+    for req, res in zip(reqs, results):
+        _same_result(res, ref.search(req.workload, req.size_budget_kb,
+                                     req.bw_budget,
+                                     objective=req.objective))
+
+    # the shared store ended clean: entries present, nothing quarantined
+    store = TableStore(store_root)
+    assert len(list(store.entries())) > 0
+    assert not (store.quarantine_dir.exists()
+                and list(store.quarantine_dir.iterdir()))
+    assert not list(store_root.glob(".tmp-*"))
+
+
+def test_coalescing_builds_fewer_tables_than_sequential_cold():
+    """The economic claim behind the service: a coalesced burst builds
+    strictly fewer cost tables than the same queries issued as isolated
+    cold searches (no store, caches cleared between sequential runs)."""
+    wl = Workload(net=tuple(tiny_net()), name="tiny")
+    reqs = [DSERequest(wl, 512, 256, objective="cycles"),
+            DSERequest("alexnet", 512, 256, objective="cycles"),
+            DSERequest(wl, 512, 256, objective="edp"),
+            DSERequest("alexnet", 256, 256, objective="cycles")]
+
+    def builds():
+        s = table_cache_stats()
+        return sum(int(s[f"{k}_builds"]) for k in ("conv", "simd", "gemm"))
+
+    sequential = 0
+    for r in reqs:
+        clear_table_caches()
+        _study().search(r.workload, r.size_budget_kb, r.bw_budget,
+                        objective=r.objective)
+        sequential += builds()
+
+    clear_table_caches()
+    with DSEService(_study(), autostart=False,
+                    max_batch=len(reqs)) as svc:
+        tickets = DSEClient(svc).submit_burst(reqs)
+        svc.start()
+        for t in tickets:
+            t.result(timeout=600)
+    coalesced = builds()
+    assert coalesced < sequential, (coalesced, sequential)
+
+
+# ---- dedup / admission ------------------------------------------------------
+
+def test_identical_inflight_requests_share_one_result():
+    wl = Workload(net=tuple(tiny_net()), name="tiny")
+    svc = DSEService(_study(), autostart=False)
+    a = svc.submit(wl, 512, 256)
+    b = svc.submit(wl, 512, 256)                   # dedup: rides a's future
+    c = svc.submit(wl, 256, 256)                   # different budget: new
+    svc.start()
+    ra, rb, rc = (t.result(timeout=600) for t in (a, b, c))
+    svc.close()
+    assert ra is rb                                # the SAME object, shared
+    assert rc is not ra
+    st = svc.stats()
+    assert st.dedup_hits == 1
+    assert st.submitted == 3 and st.completed == 2
+    assert st.priced_requests == 2
+
+
+def test_admission_control_bounds_pending_and_rejects_after_close():
+    wl = Workload(net=tuple(tiny_net()), name="tiny")
+    svc = DSEService(_study(), autostart=False, max_pending=2)
+    svc.submit(wl, 512, 256)
+    svc.submit(wl, 256, 256)
+    with pytest.raises(AdmissionError) as exc:
+        svc.submit(wl, 128, 256)
+    assert exc.value.kind == "rejected"
+    assert svc.stats().rejected == 1
+    svc.close(drain=False)
+    with pytest.raises(AdmissionError):
+        svc.submit(wl, 512, 256)
+
+
+# ---- graceful degradation ---------------------------------------------------
+
+def test_poisoned_request_fails_alone():
+    """An unresolvable workload and an infeasible budget each fail with
+    a structured error on their own future; healthy batchmates complete
+    with results bit-identical to a direct search."""
+    svc = DSEService(_study(), autostart=False)
+    client = DSEClient(svc)
+    bad_net = client.submit("no_such_net", 512, 256)
+    # far below the smallest lattice point: the grid front-end raises
+    bad_budget = client.submit(Workload(net=tuple(tiny_net())), 1, 256)
+    good = client.submit("alexnet", 512, 256)
+    svc.start()
+    res = good.result(timeout=600)
+    e_net = bad_net.exception(timeout=600)
+    e_budget = bad_budget.exception(timeout=600)
+    svc.close()
+    assert isinstance(e_net, InvalidRequest) and e_net.kind == "invalid"
+    assert "no_such_net" in str(e_net)
+    assert isinstance(e_budget, ServiceError)
+    assert e_budget.kind in ("error",) and e_budget.__cause__ is not None
+    _same_result(res, _study().search("alexnet", 512, 256))
+    st = svc.stats()
+    assert st.completed == 1 and st.failed == 2 and st.timeouts == 0
+
+
+def test_batch_exception_degrades_to_serial_not_dropped():
+    """An injected dispatcher batch exception (``service_batch_exc``)
+    must degrade the group to per-request serial pricing: every request
+    still completes, bit-identical, and the fault is accounted."""
+    faultinject.arm("service_batch_exc", times=1)
+    wl = Workload(net=tuple(tiny_net()), name="tiny")
+    svc = DSEService(_study(), autostart=False)
+    tickets = DSEClient(svc).submit_burst(
+        [DSERequest(wl, 512, 256), DSERequest("alexnet", 512, 256)])
+    svc.start()
+    results = [t.result(timeout=600) for t in tickets]
+    svc.close()
+    assert faultinject.fired("service_batch_exc") == 1
+    st = svc.stats()
+    assert st.degraded_batches == 1
+    assert st.completed == 2 and st.failed == 0
+    ref = _study()
+    _same_result(results[0], ref.search(wl, 512, 256))
+    _same_result(results[1], ref.search("alexnet", 512, 256))
+
+
+def test_hang_watchdog_isolates_the_hung_request():
+    """``service_request_hang`` armed twice: the grouped dispatch hangs
+    (watchdog trips -> degraded serial), then the first serial pricing
+    hangs too and times out ALONE — its batchmate still completes."""
+    faultinject.arm("service_request_hang", times=2, arg=30)
+    wl = Workload(net=tuple(tiny_net()), name="tiny")
+    svc = DSEService(_study(), autostart=False, batch_timeout_s=0.5)
+    tickets = DSEClient(svc).submit_burst(
+        [DSERequest(wl, 512, 256, tag="hangs"),
+         DSERequest("alexnet", 512, 256, tag="survives")])
+    svc.start()
+    err = tickets[0].exception(timeout=600)
+    res = tickets[1].result(timeout=600)
+    svc.close()
+    assert isinstance(err, RequestTimeout) and err.kind == "timeout"
+    assert err.request.tag == "hangs"
+    st = svc.stats()
+    assert st.degraded_batches == 1
+    assert st.timeouts == 1 and st.completed == 1
+    _same_result(res, _study().search("alexnet", 512, 256))
+
+
+def test_expired_in_queue_times_out_without_pricing():
+    wl = Workload(net=tuple(tiny_net()), name="tiny")
+    svc = DSEService(_study(), autostart=False)
+    t = svc.submit(wl, 512, 256, timeout_s=0.01)
+    import time
+    time.sleep(0.05)                  # deadline passes while queued
+    svc.start()
+    err = t.exception(timeout=60)
+    svc.close()
+    assert isinstance(err, RequestTimeout)
+    st = svc.stats()
+    assert st.timeouts == 1 and st.searches == 0
+
+
+# ---- client surface ---------------------------------------------------------
+
+def test_query_burst_returns_errors_in_place():
+    wl = Workload(net=tuple(tiny_net()), name="tiny")
+    with DSEService(_study(), coalesce_window_s=0.05) as svc:
+        out = DSEClient(svc).query_burst(
+            [DSERequest(wl, 512, 256),
+             DSERequest("no_such_net", 512, 256)],
+            return_errors=True)
+    assert not isinstance(out[0], ServiceError)
+    assert isinstance(out[1], InvalidRequest)
+    _same_result(out[0], _study().search(wl, 512, 256))
+
+
+def test_sync_query_matches_direct_search():
+    with DSEService(_study()) as svc:
+        res = DSEClient(svc).query("alexnet", 512, 256, objective="edp")
+    _same_result(res, _study().search("alexnet", 512, 256,
+                                      objective="edp"))
