@@ -1,0 +1,143 @@
+"""The module manifest: what each pass checks, over which files.
+
+The annotations in the source (``# guarded-by:``, ``# holds-lock:``)
+declare *what* is protected; this manifest declares the repo-wide facts
+no single file can state — the global lock acquisition order, which
+modules form the int64 cycle-count call graph, which modules must run
+under the x64 guard, where the fault registry lives, and which modules
+are pricing paths under the determinism contract.  Tests construct
+custom ``Manifest`` instances over fixture snippets; the repo's own run
+uses ``DEFAULT_MANIFEST``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Manifest:
+    # ---- locks pass --------------------------------------------------------
+    # Global acquisition order, outermost first.  Acquiring lock B while
+    # holding lock A is legal iff A appears strictly before B here.
+    # Lock ids: "<path-suffix>:<name>" for module globals,
+    # "<path-suffix>:<Class>.self.<attr>" for instance locks,
+    # "<path-suffix>:<Class>.<method>" for context-manager methods.
+    lock_order: Tuple[str, ...] = ()
+    # Caller-holds-lock helper suffix (``# holds-lock:`` names the lock).
+    locked_suffix: str = "_locked"
+    # Call-site resolution hints for the lock-order graph: the rendered
+    # call expression (``self.metrics.count``, ``store.save``) -> the
+    # qualified function id whose acquisitions the call implies.
+    call_patterns: Mapping[str, str] = field(default_factory=dict)
+
+    # ---- exactness pass ----------------------------------------------------
+    # path-suffix -> ("*",) for the whole module, or a tuple of top-level
+    # function/class names forming the int64 cycle-math roots there.  The
+    # pass expands the roots through same-fileset calls (the call graph).
+    exact_scope: Mapping[str, Tuple[str, ...]] = field(default_factory=dict)
+    # Call names that introduce floats a cycle path must never see.
+    exact_banned_calls: Tuple[str, ...] = (
+        "mean", "average", "true_divide", "divide", "float_power")
+    # ``/`` is legal only directly inside one of these (the exact
+    # ceil-of-integer-division idiom: all operands integral, < 2**53).
+    exact_div_wrappers: Tuple[str, ...] = ("ceil", "floor", "round")
+
+    # ---- x64 pass ----------------------------------------------------------
+    x64_modules: Tuple[str, ...] = ()
+    x64_guard_decorators: Tuple[str, ...] = ("_x64",)
+    x64_guard_context: str = "enable_x64"
+    # jnp-ish root names whose use marks a function as device-touching.
+    x64_numeric_roots: Tuple[str, ...] = ("jnp", "pl", "pltpu")
+    # jax.<attr> uses that are numeric (jax.default_backend etc. are not).
+    x64_jax_attrs: Tuple[str, ...] = ("jit", "vmap", "lax", "numpy", "grad",
+                                      "pmap", "experimental")
+
+    # ---- faults pass -------------------------------------------------------
+    fault_module: str = "repro/core/faultinject.py"
+    fault_registry_name: str = "FAULT_POINTS"
+    fault_call_names: Tuple[str, ...] = ("fire", "arm", "armed", "fired",
+                                         "disarm")
+    tests_dir_name: str = "tests"
+
+    # ---- determinism pass --------------------------------------------------
+    determinism_modules: Tuple[str, ...] = ()
+    banned_clock_calls: Tuple[str, ...] = (
+        "time.time", "time.time_ns", "datetime.now", "datetime.utcnow",
+        "datetime.datetime.now", "datetime.datetime.utcnow", "date.today")
+    # attribute calls on the *global* (unseeded) RNGs
+    banned_rng_roots: Tuple[str, ...] = ("random", "np.random",
+                                         "numpy.random")
+    seeded_rng_ctors: Tuple[str, ...] = ("Random", "default_rng",
+                                         "RandomState", "PRNGKey", "SeedSequence")
+    # order-insensitive consumers that sanction set iteration
+    order_safe_calls: Tuple[str, ...] = ("sorted", "min", "max", "sum",
+                                         "len", "any", "all", "frozenset",
+                                         "set")
+
+
+# ---------------------------------------------------------------------------
+# The repo's own manifest
+# ---------------------------------------------------------------------------
+
+DEFAULT_MANIFEST = Manifest(
+    lock_order=(
+        # serving tier first (outermost): the dispatcher/client threads
+        # take service state locks, then fan into the shared caches
+        "repro/serve/service.py:DSEService.self._lock",
+        "repro/serve/metrics.py:ServiceMetrics.self._lock",
+        # the process-lifetime table caches
+        "repro/core/dse.py:_CACHE_LOCK",
+        # leaves: held strictly inside a cache critical section
+        "repro/core/store.py:TableStore._locked",
+        "repro/core/faultinject.py:_FAULT_LOCK",
+    ),
+    call_patterns={
+        # service -> metrics accumulator (all mutators lock internally)
+        "self.metrics.count": "repro/serve/metrics.py:ServiceMetrics.count",
+        "self.metrics.batch": "repro/serve/metrics.py:ServiceMetrics.batch",
+        "self.metrics.search": "repro/serve/metrics.py:ServiceMetrics.search",
+        "self.metrics.completed":
+            "repro/serve/metrics.py:ServiceMetrics.completed",
+        "self.metrics.failed": "repro/serve/metrics.py:ServiceMetrics.failed",
+        "self.metrics.snapshot":
+            "repro/serve/metrics.py:ServiceMetrics.snapshot",
+        # cache layer -> persistent store (fcntl critical sections)
+        "store.save": "repro/core/store.py:TableStore.save",
+        "store.load": "repro/core/store.py:TableStore.load",
+        "store.contains": "repro/core/store.py:TableStore.contains",
+        # anything -> fault registry
+        "faultinject.fire": "repro/core/faultinject.py:fire",
+        "faultinject.arm": "repro/core/faultinject.py:arm",
+        "faultinject.armed": "repro/core/faultinject.py:armed",
+        "faultinject.fired": "repro/core/faultinject.py:fired",
+        "faultinject.reset": "repro/core/faultinject.py:reset",
+    },
+    exact_scope={
+        # the paper's cycle/energy quantity derivations: whole modules
+        "repro/core/conv_model.py": ("*",),
+        "repro/core/simd_model.py": ("*",),
+        "repro/core/gemm_model.py": ("*",),
+        "repro/core/tiling.py": ("*",),
+        # dse.py mixes cycle math with float scoring/reporting; only the
+        # cost-table classes (and everything they call) are int64-exact
+        "repro/core/dse.py": ("ConvTable", "SimdTable", "GemmTable"),
+    },
+    x64_modules=(
+        "repro/core/gridax.py",
+        "repro/kernels/reduce.py",
+    ),
+    determinism_modules=(
+        "repro/core/dse.py",
+        "repro/core/tiling.py",
+        "repro/core/conv_model.py",
+        "repro/core/simd_model.py",
+        "repro/core/gemm_model.py",
+        "repro/core/optimize.py",
+        "repro/core/study.py",
+        "repro/core/objectives.py",
+        "repro/core/energy.py",
+        "repro/core/backward.py",
+        "repro/core/gridax.py",
+    ),
+)

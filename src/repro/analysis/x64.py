@@ -1,0 +1,120 @@
+"""Pass 3 — x64-guard check on the device-backend modules.
+
+jax defaults to int32/float32; the grid backends carry int64 cycle
+counts, so every public entry point that touches jax/jnp/pallas must run
+under ``jax.experimental.enable_x64()`` — via the ``@_x64`` decorator or
+by wrapping its whole body in ``with enable_x64():``.  An unguarded
+entry silently truncates grids past 2**31.
+
+``X64001``  a public function in an ``x64_modules`` file touches a
+            numeric root (``jnp``/``pl``/``pltpu``/``jax.jit``/...) or an
+            unguarded module-level jit binding without the guard.
+``X64002``  a module-level binding wraps a jax transform
+            (``jax.jit(...)``) without the guard wrapper
+            (``_x64(jax.jit(...))``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence, Set
+
+from .manifest import Manifest
+from .report import Finding
+from .source import SourceFile, expr_text
+
+PASS_ID = "x64"
+
+
+def _contains_jax_transform(node: ast.AST, manifest: Manifest) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute):
+            text = expr_text(n)
+            parts = text.split(".")
+            if parts[0] == "jax" and len(parts) > 1 \
+                    and parts[1] in manifest.x64_jax_attrs:
+                return True
+        if isinstance(n, ast.Name) and n.id in manifest.x64_numeric_roots:
+            return True
+    return False
+
+
+def _guard_wrapped(value: ast.AST, manifest: Manifest) -> bool:
+    """``_x64(jax.jit(...))`` — outermost call is the guard wrapper."""
+    return (isinstance(value, ast.Call)
+            and expr_text(value.func).split(".")[-1]
+            in manifest.x64_guard_decorators)
+
+
+def _is_guarded(fn: ast.FunctionDef, manifest: Manifest) -> bool:
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if expr_text(target).split(".")[-1] in manifest.x64_guard_decorators:
+            return True
+    body = fn.body
+    if body and isinstance(body[0], ast.Expr) \
+            and isinstance(body[0].value, ast.Constant) \
+            and isinstance(body[0].value.value, str):
+        body = body[1:]
+    if len(body) == 1 and isinstance(body[0], ast.With):
+        for item in body[0].items:
+            text = expr_text(item.context_expr).removesuffix("()")
+            if text.split(".")[-1] == manifest.x64_guard_context:
+                return True
+    return False
+
+
+def _device_use(fn: ast.FunctionDef, manifest: Manifest,
+                unguarded_bindings: Set[str]) -> Optional[str]:
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name):
+            if n.id in manifest.x64_numeric_roots:
+                return f"uses {n.id!r}"
+            if n.id in unguarded_bindings:
+                return f"calls unguarded binding {n.id!r}"
+        if isinstance(n, ast.Attribute):
+            text = expr_text(n)
+            parts = text.split(".")
+            if parts[0] in manifest.x64_numeric_roots:
+                return f"uses {text!r}"
+            if parts[0] == "jax" and len(parts) > 1 \
+                    and parts[1] in manifest.x64_jax_attrs:
+                return f"uses {text!r}"
+    return None
+
+
+def run(files: Sequence[SourceFile], manifest: Manifest) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in files:
+        if not any(sf.matches(m) for m in manifest.x64_modules):
+            continue
+        unguarded: Set[str] = set()
+        for node in sf.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call) \
+                    and _contains_jax_transform(node.value, manifest):
+                name = node.targets[0].id
+                if not _guard_wrapped(node.value, manifest):
+                    unguarded.add(name)
+                    findings.append(Finding(
+                        sf.rel, node.lineno, node.col_offset, PASS_ID,
+                        "X64002",
+                        f"module binding {name!r} wraps a jax transform "
+                        f"without the x64 guard "
+                        f"({manifest.x64_guard_decorators[0]}(...))",
+                        symbol=name))
+        for node in sf.tree.body:
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if node.name.startswith("_"):
+                continue
+            if _is_guarded(node, manifest):
+                continue
+            reason = _device_use(node, manifest, unguarded)
+            if reason is not None:
+                findings.append(Finding(
+                    sf.rel, node.lineno, node.col_offset, PASS_ID, "X64001",
+                    f"public entry {node.name!r} {reason} without the x64 "
+                    f"guard: int64 grids truncate to int32",
+                    symbol=node.name))
+    return findings

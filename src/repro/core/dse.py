@@ -388,10 +388,10 @@ class GemmTable(ConvTable):
 # ``phases`` vector always matches its caller's layer list.
 # ---------------------------------------------------------------------------
 
-_CONV_TABLE_CACHE: Dict[tuple, ConvTable] = {}
-_SIMD_TABLE_CACHE: Dict[tuple, SimdTable] = {}
-_GEMM_TABLE_CACHE: Dict[tuple, GemmTable] = {}
-_PREFETCHED_UNTOUCHED: set = set()      # parallel/store loads not yet fetched
+_CONV_TABLE_CACHE: Dict[tuple, ConvTable] = {}   # guarded-by: _CACHE_LOCK
+_SIMD_TABLE_CACHE: Dict[tuple, SimdTable] = {}   # guarded-by: _CACHE_LOCK
+_GEMM_TABLE_CACHE: Dict[tuple, GemmTable] = {}   # guarded-by: _CACHE_LOCK
+_PREFETCHED_UNTOUCHED: set = set()               # guarded-by: _CACHE_LOCK
 # One lock guards every L1 dict, the miss-accounting set, and the stat
 # counters: the serving subsystem (``repro.serve``) drives these caches
 # from a dispatcher thread plus arbitrary client threads, where unlocked
@@ -402,7 +402,7 @@ _PREFETCHED_UNTOUCHED: set = set()      # parallel/store loads not yet fetched
 # in tests/test_dse_threadsafety.py pins "concurrent identical gets
 # build exactly once".
 _CACHE_LOCK = threading.RLock()
-_TABLE_CACHE_STATS = {"conv_hits": 0, "conv_misses": 0,
+_TABLE_CACHE_STATS = {"conv_hits": 0, "conv_misses": 0,  # guarded-by: _CACHE_LOCK
                       "simd_hits": 0, "simd_misses": 0,
                       "gemm_hits": 0, "gemm_misses": 0,
                       "conv_parallel_builds": 0,
@@ -559,7 +559,7 @@ def batch_build_conv_tables(hws: Sequence[HardwareSpec],
         _batch_build_conv_tables_locked(hws, layers)
 
 
-def _batch_build_conv_tables_locked(hws: Sequence[HardwareSpec],
+def _batch_build_conv_tables_locked(hws: Sequence[HardwareSpec],  # holds-lock: _CACHE_LOCK
                                     layers: List[ConvLayer]) -> None:
     # one layers-part tuple shared by every per-variant cache key (the
     # inner tuple of _conv_table_key, hoisted out of the hw loop)
@@ -638,7 +638,7 @@ def batch_build_gemm_tables(hws: Sequence[HardwareSpec],
         _batch_build_gemm_tables_locked(hws, layers)
 
 
-def _batch_build_gemm_tables_locked(hws: Sequence[HardwareSpec],
+def _batch_build_gemm_tables_locked(hws: Sequence[HardwareSpec],  # holds-lock: _CACHE_LOCK
                                     layers: List[GemmLayer]) -> None:
     lpart = tuple((_gemm_layer_key(l), l.count, l.phase) for l in layers)
     missing = [(key, hw) for hw in dict.fromkeys(hws)

@@ -32,8 +32,9 @@ Known fault points (the arg is point-specific):
                        (default 1.0) while inside the critical section,
                        exercising lock-contention timeouts in other
                        writers
-``selfcheck_perturb``  reserved for tests that poison a cached table to
-                       prove the DSE self-check mode catches drift
+``selfcheck_perturb``  the study self-check's reference cycles are
+                       perturbed by ``arg`` (default 1) — proves the
+                       integrity comparison actually trips on drift
 ``service_batch_exc``  a ``repro.serve`` grouped dispatch raises before
                        pricing — the service must degrade to per-request
                        serial evaluation, not drop the batch
@@ -54,11 +55,28 @@ dict lookup returning ``None``.
 from __future__ import annotations
 
 import os
+import threading
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Optional
 
 ENV_VAR = "REPRO_FAULTS"
+
+# The canonical fault-point registry.  Injection sites (``fire``), tests
+# (``arm`` / REPRO_FAULTS specs), and the docstring table above must all
+# use these names; ``repro.analysis`` cross-checks the three sets, and
+# ``arm`` warns on a name not listed here.
+FAULT_POINTS: Dict[str, str] = {
+    "conv_worker_exc": "parallel ConvTable build task raises in the worker",
+    "conv_worker_crash": "worker hard-exits mid-task (BrokenProcessPool)",
+    "conv_worker_hang": "worker sleeps arg seconds, tripping build timeout",
+    "store_corrupt": "table-store file gets a flipped byte after write",
+    "store_truncate": "table-store file truncated to half after write",
+    "store_lock_hold": "store advisory lock held arg seconds in-section",
+    "selfcheck_perturb": "self-check reference cycles perturbed by arg",
+    "service_batch_exc": "serve grouped dispatch raises before pricing",
+    "service_request_hang": "serve pricing call sleeps arg seconds",
+}
 
 
 @dataclass
@@ -70,46 +88,65 @@ class Fault:
     arg: Optional[float] = None
 
 
-_FAULTS: Dict[str, Fault] = {}
-_FIRED: Dict[str, int] = {}          # telemetry: how often each point fired
+# Armed faults are mutated from every thread that prices (the serving
+# dispatcher, build workers' parent, tests): all registry state below is
+# guarded by one lock.  ``fire`` must be a single atomic
+# check-decrement-count — two racing callers must consume two distinct
+# firings, never the same one twice.
+_FAULT_LOCK = threading.Lock()
+_FAULTS: Dict[str, Fault] = {}       # guarded-by: _FAULT_LOCK
+_FIRED: Dict[str, int] = {}          # guarded-by: _FAULT_LOCK
 
 
 def arm(point: str, times: int = 1, arg: Optional[float] = None) -> None:
-    """Arm ``point`` to fire on its next ``times`` queries."""
-    _FAULTS[point] = Fault(point, int(times), arg)
+    """Arm ``point`` to fire on its next ``times`` queries.  Unknown
+    points warn (a typo here silently disables a recovery test) but
+    still arm."""
+    if point not in FAULT_POINTS:
+        warnings.warn(
+            f"arming unknown fault point {point!r} — not in "
+            f"FAULT_POINTS; is it a typo?", RuntimeWarning, stacklevel=2)
+    with _FAULT_LOCK:
+        _FAULTS[point] = Fault(point, int(times), arg)
 
 
 def disarm(point: str) -> None:
-    _FAULTS.pop(point, None)
+    with _FAULT_LOCK:
+        _FAULTS.pop(point, None)
 
 
 def reset() -> None:
     """Disarm everything and zero the fired counters (test teardown)."""
-    _FAULTS.clear()
-    _FIRED.clear()
+    with _FAULT_LOCK:
+        _FAULTS.clear()
+        _FIRED.clear()
 
 
 def armed(point: str) -> bool:
-    f = _FAULTS.get(point)
-    return f is not None and f.times != 0
+    with _FAULT_LOCK:
+        f = _FAULTS.get(point)
+        return f is not None and f.times != 0
 
 
 def fired(point: str) -> int:
     """How many times ``point`` has actually fired in this process."""
-    return _FIRED.get(point, 0)
+    with _FAULT_LOCK:
+        return _FIRED.get(point, 0)
 
 
 def fire(point: str) -> Optional[Fault]:
-    """Consume one firing of ``point``: returns the armed ``Fault`` (for
-    its ``arg``) when the fault should be injected now, else ``None``.
-    ``times < 0`` arms a fault that fires on every query."""
-    f = _FAULTS.get(point)
-    if f is None or f.times == 0:
-        return None
-    if f.times > 0:
-        f.times -= 1
-    _FIRED[point] = _FIRED.get(point, 0) + 1
-    return f
+    """Consume one firing of ``point``: returns a snapshot of the armed
+    ``Fault`` (for its ``arg``) when the fault should be injected now,
+    else ``None``.  ``times < 0`` arms a fault that fires on every
+    query.  Atomic: concurrent callers each consume a distinct firing."""
+    with _FAULT_LOCK:
+        f = _FAULTS.get(point)
+        if f is None or f.times == 0:
+            return None
+        if f.times > 0:
+            f.times -= 1
+        _FIRED[point] = _FIRED.get(point, 0) + 1
+        return replace(f)
 
 
 def load_env(env: Optional[str] = None) -> None:

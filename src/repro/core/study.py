@@ -41,6 +41,7 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
+from . import faultinject
 from .backward import expand_training_graph
 from .dse import (BWS, SEARCH_METHODS, SIZES_KB, DSEPoint, DSEResult, Layer,
                   clear_table_caches, resolve_backend, table_cache_stats)
@@ -400,6 +401,9 @@ class Study:
         idx = rng.sample(range(count), min(self.selfcheck, count))
         for point in [candidate(i) for i in idx] + [res.best]:
             expected = _reference_point_cycles(self.hw, layers, point)
+            f = faultinject.fire("selfcheck_perturb")
+            if f is not None:
+                expected += int(f.arg or 1)
             if expected != point.cycles:
                 raise IntegrityError(key, point, expected, point.cycles)
 

@@ -16,8 +16,10 @@ equal-valued candidates the lowest flat index wins — exactly the legacy
 strict-inequality (size-outer, bandwidth-inner) walk that
 ``core.dse._grid_search_many`` and ``search_reference`` pin.
 
-int64 note: cycle grids are int64 (callers run under ``enable_x64`` —
-see ``core.gridax``); interpret mode executes that faithfully on CPU.
+int64 note: cycle grids are int64; the public entry wraps itself in
+``enable_x64()`` (nesting inside an already-guarded caller such as
+``core.gridax`` is a no-op), and interpret mode executes int64
+faithfully on CPU.
 Real TPU lowering of int64 is not supported, so on-device use means
 int32-safe grids — the callers keep this kernel on the interpret path
 off-TPU and validate it there, like every other kernel in this package.
@@ -26,6 +28,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import enable_x64
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -70,19 +73,20 @@ def grid_minmax_pallas(conv_rows: jax.Array, simd_rows: jax.Array,
     panels ([n_size_triples x n_bw] and [n_vmem x n_bw]); ``s3_of``/
     ``v_of`` are int32 per-size-row projections into them.
     """
-    ns = s3_of.shape[0]
-    nb = conv_rows.shape[1]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(ns,),
-        in_specs=[pl.BlockSpec((1, nb), lambda i, s3, v: (s3[i], 0)),
-                  pl.BlockSpec((1, nb), lambda i, s3, v: (v[i], 0))],
-        out_specs=pl.BlockSpec((4,), lambda i, s3, v: (0,),
-                               memory_space=pltpu.SMEM),
-    )
-    return pl.pallas_call(
-        _minmax_kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((4,), conv_rows.dtype),
-        interpret=interpret,
-    )(s3_of, v_of, conv_rows, simd_rows)
+    with enable_x64():
+        ns = s3_of.shape[0]
+        nb = conv_rows.shape[1]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(ns,),
+            in_specs=[pl.BlockSpec((1, nb), lambda i, s3, v: (s3[i], 0)),
+                      pl.BlockSpec((1, nb), lambda i, s3, v: (v[i], 0))],
+            out_specs=pl.BlockSpec((4,), lambda i, s3, v: (0,),
+                                   memory_space=pltpu.SMEM),
+        )
+        return pl.pallas_call(
+            _minmax_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((4,), conv_rows.dtype),
+            interpret=interpret,
+        )(s3_of, v_of, conv_rows, simd_rows)

@@ -131,12 +131,12 @@ class ServiceMetrics:
 
     def __init__(self, latency_window: int = LATENCY_WINDOW):
         self._lock = threading.Lock()
-        self._counts: Dict[str, int] = {
+        self._counts: Dict[str, int] = {             # guarded-by: self._lock
             k: 0 for k in ("submitted", "completed", "failed", "timeouts",
                            "rejected", "dedup_hits", "batches",
                            "batch_requests", "degraded_batches",
                            "searches", "priced_requests")}
-        self._latencies: deque = deque(maxlen=latency_window)
+        self._latencies: deque = deque(maxlen=latency_window)  # guarded-by: self._lock
 
     def count(self, key: str, n: int = 1) -> None:
         with self._lock:

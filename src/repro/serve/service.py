@@ -249,12 +249,12 @@ class DSEService:
         self.metrics = ServiceMetrics()
         self._queue: "queue.Queue[_Entry]" = queue.Queue()
         self._lock = threading.Lock()
-        self._inflight: Dict[tuple, _Entry] = {}
-        self._pending = 0
-        self._closed = False
-        self._abandon = False
+        self._inflight: Dict[tuple, _Entry] = {}   # guarded-by: self._lock
+        self._pending = 0                          # guarded-by: self._lock
+        self._closed = False                       # guarded-by: self._lock
+        self._abandon = False                      # guarded-by: self._lock
         self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
+        self._thread: Optional[threading.Thread] = None  # guarded-by: self._lock
         if autostart:
             self.start()
 
@@ -282,8 +282,8 @@ class DSEService:
             self._closed = True
             if not drain:
                 self._abandon = True
+            t = self._thread
         self._stop.set()
-        t = self._thread
         if t is not None and t is not threading.current_thread():
             t.join(timeout)
 
@@ -391,8 +391,10 @@ class DSEService:
         self.metrics.batch(len(batch))
         now = time.monotonic()
         live: List[_Entry] = []
+        with self._lock:
+            abandon = self._abandon
         for e in batch:
-            if self._abandon:
+            if abandon:
                 self._fail(e, AdmissionError("service closed before "
                                              "dispatch", e.request))
                 continue

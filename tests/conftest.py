@@ -9,7 +9,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import pytest
 
+from repro.core import faultinject
+
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _disarm_faults():
+    """A test that arms a fault and fails before consuming it must not
+    leak the armed state into every later test in the process."""
+    yield
+    faultinject.reset()

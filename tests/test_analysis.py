@@ -1,0 +1,508 @@
+"""``repro.analysis`` — the static invariant checker checked.
+
+Each pass gets a known-good / seeded-violation fixture pair asserting
+the exact finding locations; the ratchet tests pin the
+fingerprint-vs-baseline mechanics; and the self-run test pins the repo's
+own ``src/`` clean against the committed ``analysis-baseline.json`` — a
+regression anywhere in the annotated invariants fails here first.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Baseline, Manifest, collect_sources,
+                            diff_against_baseline, fingerprints, run_passes)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _write(tmp_path: Path, rel: str, code: str) -> Path:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(code))
+    return p
+
+
+def _run(tmp_path: Path, manifest: Manifest, *rels: str, only=()):
+    files = collect_sources([tmp_path / r for r in rels], root=tmp_path)
+    return run_passes(files, manifest, only=only)
+
+
+def _by_code(findings):
+    out = {}
+    for f in findings:
+        out.setdefault(f.code, []).append(f)
+    return out
+
+
+# ---- locks pass ------------------------------------------------------------
+
+LOCK_MANIFEST = Manifest(lock_order=("mod.py:_LOCK", "other.py:_OTHER"))
+
+LOCK_GOOD = '''
+    import threading
+
+    _LOCK = threading.Lock()
+    _CACHE = {}          # guarded-by: _LOCK
+
+
+    def get(key):
+        with _LOCK:
+            return _CACHE.get(key)
+
+
+    def _get_locked(key):
+        return _CACHE.get(key)
+
+
+    def put(key, val):
+        with _LOCK:
+            _put_impl(key, val)
+
+
+    def _put_impl(key, val):  # holds-lock: _LOCK
+        _CACHE[key] = val
+'''
+
+LOCK_BAD = '''
+    import threading
+
+    _LOCK = threading.Lock()
+    _CACHE = {}          # guarded-by: _LOCK
+
+
+    def get(key):
+        return _CACHE.get(key)          # line 8: unguarded read
+
+
+    def helper():
+        _get_locked(1)                  # line 13: no lock held
+
+
+    def _get_locked(key):
+        return _CACHE.get(key)
+'''
+
+
+def test_locks_clean_fixture(tmp_path):
+    _write(tmp_path, "mod.py", LOCK_GOOD)
+    assert _run(tmp_path, LOCK_MANIFEST, "mod.py", only=("locks",)) == []
+
+
+def test_locks_flags_unguarded_access_and_bare_locked_call(tmp_path):
+    _write(tmp_path, "mod.py", LOCK_BAD)
+    by = _by_code(_run(tmp_path, LOCK_MANIFEST, "mod.py", only=("locks",)))
+    assert [(f.line, f.symbol) for f in by["LOCK001"]] \
+        == [(9, "mod.py:get:_CACHE")]
+    assert [(f.line, f.symbol) for f in by["LOCK002"]] \
+        == [(13, "mod.py:helper:_get_locked")]
+
+
+def test_locks_flags_annotation_typo(tmp_path):
+    _write(tmp_path, "mod.py", '''
+        import threading
+        _LOCK = threading.Lock()
+        _CACHE = {}      # guarded-by: _LOKC
+
+        def get(key):
+            with _LOCK:
+                return _CACHE.get(key)
+    ''')
+    by = _by_code(_run(tmp_path, LOCK_MANIFEST, "mod.py", only=("locks",)))
+    assert len(by["LOCK004"]) == 1 and "_LOKC" in by["LOCK004"][0].message
+
+
+def test_locks_flags_direct_order_inversion(tmp_path):
+    _write(tmp_path, "mod.py", '''
+        import threading
+        _LOCK = threading.Lock()
+
+        def fine():
+            with _LOCK:
+                pass
+    ''')
+    _write(tmp_path, "other.py", '''
+        import threading
+        from mod import _LOCK
+        _OTHER = threading.Lock()
+
+        def inverted():
+            with _OTHER:
+                with _LOCK:          # _OTHER is ordered after _LOCK
+                    pass
+    ''')
+    findings = _run(tmp_path, LOCK_MANIFEST, "mod.py", "other.py",
+                    only=("locks",))
+    assert [f.code for f in findings] == ["LOCK003"]
+    assert findings[0].line == 8
+
+
+def test_locks_flags_interprocedural_order_inversion(tmp_path):
+    # callee acquires _LOCK; caller calls it while holding _OTHER, which
+    # the manifest orders *after* _LOCK — only the call graph sees it
+    _write(tmp_path, "mod.py", '''
+        import threading
+        _LOCK = threading.Lock()
+
+        def takes_lock():
+            with _LOCK:
+                return 1
+    ''')
+    _write(tmp_path, "other.py", '''
+        import threading
+        import mod
+        _OTHER = threading.Lock()
+
+        def caller():
+            with _OTHER:
+                return mod.takes_lock()
+    ''')
+    findings = _run(tmp_path, LOCK_MANIFEST, "mod.py", "other.py",
+                    only=("locks",))
+    assert [f.code for f in findings] == ["LOCK003"]
+    assert findings[0].path == "other.py" and findings[0].line == 8
+
+
+# ---- exactness pass --------------------------------------------------------
+
+EXACT_MANIFEST = Manifest(exact_scope={"cycles.py": ("*",)})
+
+
+def test_exact_clean_fixture(tmp_path):
+    _write(tmp_path, "cycles.py", '''
+        import numpy as np
+
+        def folds(total, per):
+            return int(np.ceil(total / per))    # sanctioned ceil-div
+
+        def spans(total, per):
+            return total // per + 2
+    ''')
+    assert _run(tmp_path, EXACT_MANIFEST, "cycles.py", only=("exact",)) == []
+
+
+def test_exact_flags_div_banned_call_literal_and_float32(tmp_path):
+    _write(tmp_path, "cycles.py", '''
+        import numpy as np
+
+        def bad_div(total, per):
+            return total / per                  # line 5
+
+        def bad_mean(xs):
+            return np.mean(xs)                  # line 8
+
+        def bad_literal(x):
+            return x * 0.5                      # line 11
+
+        def bad_dtype(xs):
+            return np.asarray(xs, dtype=np.float32)   # line 14
+    ''')
+    by = _by_code(_run(tmp_path, EXACT_MANIFEST, "cycles.py",
+                       only=("exact",)))
+    assert [f.line for f in by["EX001"]] == [5]
+    assert [f.line for f in by["EX002"]] == [8]
+    assert [f.line for f in by["EX003"]] == [11]
+    assert [f.line for f in by["EX004"]] == [14]
+
+
+def test_exact_scope_expands_through_calls(tmp_path):
+    # only `entry` is a root; `helper` is pulled in via the call closure
+    manifest = Manifest(exact_scope={"cycles.py": ("entry",)})
+    _write(tmp_path, "cycles.py", '''
+        def entry(a, b):
+            return helper(a, b)
+
+        def helper(a, b):
+            return a / b                        # line 6
+
+        def unrelated(a, b):
+            return a / b                        # not reachable from entry
+    ''')
+    findings = _run(tmp_path, manifest, "cycles.py", only=("exact",))
+    assert [(f.code, f.line) for f in findings] == [("EX001", 6)]
+
+
+# ---- x64 pass --------------------------------------------------------------
+
+X64_MANIFEST = Manifest(x64_modules=("grid.py",))
+
+
+def test_x64_clean_fixture(tmp_path):
+    _write(tmp_path, "grid.py", '''
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        def _x64(fn):
+            def wrapped(*a, **k):
+                with enable_x64():
+                    return fn(*a, **k)
+            return wrapped
+
+        _JIT = _x64(jax.jit(lambda x: x + 1))
+
+        @_x64
+        def decorated(x):
+            return jnp.asarray(x)
+
+        def with_guarded_body(x):
+            """Docstring."""
+            with enable_x64():
+                return jnp.asarray(x)
+
+        def only_calls_guarded(x):
+            return _JIT(x)
+    ''')
+    assert _run(tmp_path, X64_MANIFEST, "grid.py", only=("x64",)) == []
+
+
+def test_x64_flags_unguarded_entry_and_binding(tmp_path):
+    _write(tmp_path, "grid.py", '''
+        import jax
+        import jax.numpy as jnp
+
+        _JIT = jax.jit(lambda x: x + 1)         # line 5: unguarded binding
+
+        def unguarded(x):
+            return jnp.asarray(x)               # entry def at line 7
+    ''')
+    by = _by_code(_run(tmp_path, X64_MANIFEST, "grid.py", only=("x64",)))
+    assert [(f.line, f.symbol) for f in by["X64002"]] == [(5, "_JIT")]
+    assert [(f.line, f.symbol) for f in by["X64001"]] == [(7, "unguarded")]
+
+
+# ---- faults pass -----------------------------------------------------------
+
+FAULT_MANIFEST = Manifest(fault_module="faultinject.py")
+
+FAULT_MODULE = '''
+    FAULT_POINTS = {
+        "worker_exc": "worker raises",
+        "store_corrupt": "store corrupted",
+    }
+
+    def fire(point):
+        return None
+
+    def arm(point, times=1):
+        pass
+'''
+
+
+def test_faults_clean_fixture(tmp_path):
+    _write(tmp_path, "faultinject.py", FAULT_MODULE)
+    _write(tmp_path, "worker.py", '''
+        import faultinject
+
+        def work():
+            if faultinject.fire("worker_exc"):
+                raise RuntimeError
+            if faultinject.fire("store_corrupt"):
+                raise IOError
+    ''')
+    _write(tmp_path, "tests/test_worker.py", '''
+        import faultinject
+
+        def test_worker_exc():
+            faultinject.arm("worker_exc")
+
+        def test_env_spec():
+            spec = "store_corrupt:1"
+    ''')
+    assert _run(tmp_path, FAULT_MANIFEST, "faultinject.py", "worker.py",
+                "tests", only=("faults",)) == []
+
+
+def test_faults_flags_typo_dead_entry_and_uncovered(tmp_path):
+    _write(tmp_path, "faultinject.py", FAULT_MODULE)
+    _write(tmp_path, "worker.py", '''
+        import faultinject
+
+        def work():
+            if faultinject.fire("worker_ecx"):  # line 5: typo'd point
+                raise RuntimeError
+    ''')
+    _write(tmp_path, "tests/test_worker.py", '''
+        import faultinject
+
+        def test_worker_exc():
+            faultinject.arm("worker_exc")
+    ''')
+    by = _by_code(_run(tmp_path, FAULT_MANIFEST, "faultinject.py",
+                       "worker.py", "tests", only=("faults",)))
+    assert [(f.path, f.line, f.symbol) for f in by["FP001"]] \
+        == [("worker.py", 5, "worker_ecx")]
+    # both registered points are never fired from src (typo broke one,
+    # the other has no injection site); store_corrupt also has no test
+    assert {f.symbol for f in by["FP002"]} \
+        == {"worker_exc", "store_corrupt"}
+    assert [f.symbol for f in by["FP003"]] == ["store_corrupt"]
+
+
+def test_faults_missing_registry(tmp_path):
+    _write(tmp_path, "faultinject.py", '''
+        def fire(point):
+            return None
+    ''')
+    findings = _run(tmp_path, FAULT_MANIFEST, "faultinject.py",
+                    only=("faults",))
+    assert [f.code for f in findings] == ["FP000"]
+
+
+# ---- determinism pass ------------------------------------------------------
+
+DET_MANIFEST = Manifest(determinism_modules=("pricing.py",))
+
+
+def test_determinism_clean_fixture(tmp_path):
+    _write(tmp_path, "pricing.py", '''
+        import random
+        import time
+        import numpy as np
+
+        def price(cfgs, seed):
+            rng = np.random.default_rng(seed)
+            salt = random.Random(seed).random()
+            t0 = time.monotonic()               # timeouts are not priced
+            return sorted({c.key for c in cfgs}), rng, salt, t0
+    ''')
+    assert _run(tmp_path, DET_MANIFEST, "pricing.py",
+                only=("determinism",)) == []
+
+
+def test_determinism_flags_clock_rng_set_iter_and_hash(tmp_path):
+    _write(tmp_path, "pricing.py", '''
+        import random
+        import time
+        import numpy as np
+
+        def bad_clock():
+            return time.time()                  # line 7
+
+        def bad_rng():
+            return np.random.default_rng()      # line 10
+
+        def bad_global_rng():
+            return random.random()              # line 13
+
+        def bad_set_iter(cfgs):
+            keys = {c.key for c in cfgs}
+            return [k for k in list(keys)]      # line 17
+
+        def bad_hash(key):
+            return hash(key)                    # line 20
+    ''')
+    by = _by_code(_run(tmp_path, DET_MANIFEST, "pricing.py",
+                       only=("determinism",)))
+    assert [f.line for f in by["DT001"]] == [7]
+    assert sorted(f.line for f in by["DT002"]) == [10, 13]
+    assert [f.line for f in by["DT003"]] == [17]
+    assert [f.line for f in by["DT004"]] == [20]
+
+
+def test_determinism_set_vars_do_not_leak_across_functions(tmp_path):
+    _write(tmp_path, "pricing.py", '''
+        def makes_a_set(cfgs):
+            out = {c.key for c in cfgs}
+            return sorted(out)
+
+        def reuses_the_name(tup):
+            out = list(tup)
+            return tuple(out)                   # a list, not a set
+    ''')
+    assert _run(tmp_path, DET_MANIFEST, "pricing.py",
+                only=("determinism",)) == []
+
+
+# ---- suppressions, fingerprints, ratchet -----------------------------------
+
+def test_inline_allow_suppresses(tmp_path):
+    _write(tmp_path, "pricing.py", '''
+        def ok(key):
+            return hash(key)  # analysis: allow[DT004]
+
+        def still_bad(key):
+            return hash(key)
+    ''')
+    findings = _run(tmp_path, DET_MANIFEST, "pricing.py",
+                    only=("determinism",))
+    assert [(f.code, f.line) for f in findings] == [("DT004", 6)]
+
+
+def test_fingerprints_survive_line_drift(tmp_path):
+    src = '''
+        def bad(key):
+            return hash(key)
+    '''
+    _write(tmp_path, "pricing.py", src)
+    fp1 = set(fingerprints(_run(tmp_path, DET_MANIFEST, "pricing.py")))
+    _write(tmp_path, "pricing.py", "# a comment pushing lines down\n"
+           + "x = 1\n" + textwrap.dedent(src))
+    fp2 = set(fingerprints(_run(tmp_path, DET_MANIFEST, "pricing.py")))
+    assert fp1 == fp2
+
+
+def test_baseline_ratchet_new_vs_stale(tmp_path):
+    _write(tmp_path, "pricing.py", '''
+        def bad(key):
+            return hash(key)
+    ''')
+    old = _run(tmp_path, DET_MANIFEST, "pricing.py")
+    baseline = Baseline.from_findings(old)
+    # baselined finding: not new
+    new, stale = diff_against_baseline(old, baseline)
+    assert not new and not stale
+    # a second violation is new; fixing the first leaves it stale
+    _write(tmp_path, "pricing.py", '''
+        def other(key):
+            import time
+            return time.time()
+    ''')
+    now = _run(tmp_path, DET_MANIFEST, "pricing.py")
+    new, stale = diff_against_baseline(now, baseline)
+    assert [f.code for f in new.values()] == ["DT001"]
+    assert len(stale) == 1
+
+
+# ---- the repo's own source is clean ----------------------------------------
+
+def test_repo_src_is_clean_against_committed_baseline():
+    """The committed baseline is empty: the repo's own invariants hold.
+    Any new violation in src/ (or a fault point losing test coverage)
+    fails here with the finding printed."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         "--baseline", "analysis-baseline.json", "src"],
+        cwd=REPO, capture_output=True, text=True,
+        env={**__import__("os").environ,
+             "PYTHONPATH": str(REPO / "src")})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_repo_baseline_is_empty():
+    data = json.loads((REPO / "analysis-baseline.json").read_text())
+    assert data["findings"] == {}
+
+
+def test_cli_json_report(tmp_path):
+    # the path suffix must match a DEFAULT_MANIFEST determinism module
+    _write(tmp_path, "repro/core/optimize.py", '''
+        def bad(key):
+            return hash(key)
+    ''')
+    out = tmp_path / "findings.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--json", str(out),
+         "--only", "determinism", str(tmp_path / "repro/core/optimize.py")],
+        cwd=REPO, capture_output=True, text=True,
+        env={**__import__("os").environ,
+             "PYTHONPATH": str(REPO / "src")})
+    assert proc.returncode == 1          # unbaselined finding
+    report = json.loads(out.read_text())
+    assert report["total"] == 1
+    assert report["by_pass"] == {"determinism": 1}
+    assert report["findings"][0]["code"] == "DT004"

@@ -72,6 +72,41 @@ def test_always_fire_and_arg():
     assert faultinject.fired("conv_worker_hang") == 5
 
 
+def test_fire_is_atomic_under_contention():
+    """N threads racing ``fire`` on a ``times=K`` fault must consume
+    exactly K firings between them — the unlocked registry lost updates
+    on the ``times -= 1`` / ``_FIRED[point] += 1`` read-modify-writes."""
+    import threading
+
+    n_threads, k = 8, 64
+    attempts_per_thread = 200
+    faultinject.arm("conv_worker_exc", times=k)
+    barrier = threading.Barrier(n_threads)
+    hits = [0] * n_threads
+
+    def worker(slot):
+        barrier.wait()
+        for _ in range(attempts_per_thread):
+            if faultinject.fire("conv_worker_exc") is not None:
+                hits[slot] += 1
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(hits) == k
+    assert faultinject.fired("conv_worker_exc") == k
+    assert not faultinject.armed("conv_worker_exc")
+
+
+def test_arm_warns_on_unregistered_point():
+    with pytest.warns(RuntimeWarning, match="unknown fault point"):
+        faultinject.arm("store_corupt")  # analysis: allow[FP001]
+    faultinject.disarm("store_corupt")   # analysis: allow[FP001]
+
+
 def test_load_env_parses_spec():
     faultinject.load_env("conv_worker_crash:2,store_corrupt,"
                          "conv_worker_hang:1:30")
@@ -84,7 +119,7 @@ def test_load_env_parses_spec():
 def test_load_env_warns_on_malformed():
     with pytest.warns(RuntimeWarning, match="REPRO_FAULTS.*bogus:xx"):
         faultinject.load_env("bogus:xx,store_corrupt:1")
-    assert not faultinject.armed("bogus")
+    assert not faultinject.armed("bogus")  # analysis: allow[FP001]
     assert faultinject.armed("store_corrupt")       # good items still arm
 
 

@@ -80,6 +80,19 @@ def test_perturbed_table_raises_integrity_error():
     assert str(err.expected) in str(err) and str(err.actual) in str(err)
 
 
+def test_selfcheck_perturb_fault_trips_integrity_error():
+    """The ``selfcheck_perturb`` fault point shifts the reference cycles
+    by ``arg`` inside the comparison itself — proving the self-check
+    would trip on a real one-cycle divergence, with no cache poking."""
+    from repro.core import faultinject
+
+    faultinject.arm("selfcheck_perturb", times=1, arg=7)
+    with pytest.raises(IntegrityError) as ei:
+        _study(selfcheck=3).search(WL, 256, 256)
+    assert faultinject.fired("selfcheck_perturb") == 1
+    assert ei.value.expected - ei.value.actual == 7
+
+
 def test_selfcheck_off_by_default_misses_perturbation():
     """Documents the trade: without selfcheck the drift is silent —
     exactly why the mode exists."""
